@@ -1,0 +1,380 @@
+"""Gauss–Seidel / heat-equation benchmark — paper §7.1 (Figs. 9–13).
+
+Five versions of the blocked Gauss–Seidel iteration, mirroring the paper:
+
+* ``pure``            — sequential compute per rank, ordered boundary
+                        exchange (Pure MPI).
+* ``forkjoin``        — parallel compute tasks; sequential communication
+                        phase in the main thread; a taskwait barrier per
+                        iteration.
+* ``sentinel``        — taskified communication serialised by an artificial
+                        sentinel dependency (what you must write WITHOUT
+                        TASK_MULTIPLE, §6.3).  Note the ordering
+                        constraint: sends are chained before receives or
+                        the chain itself deadlocks — exactly the paper's
+                        point about blocking calls in tasks (§5).
+* ``interop-blk``     — TAMPI blocking mode: comm tasks use task-aware
+                        waits (pause/resume); no artificial dependencies.
+* ``interop-nonblk``  — TAMPI non-blocking mode: comm tasks bind receives
+                        to their event counter (TAMPI_Iwait) and finish
+                        immediately.
+
+Measurements: (a) REAL execution on the host task runtime at small scale
+(all versions must agree numerically); (b) deterministic makespans of the
+same task DAGs under the paper's machine model (core/simulate.py) — the
+scaling curves.  CSV schema: name,us_per_call,derived
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import TaskRuntime, tac
+from repro.core.simulate import (Simulator, SimTask, COMPUTE, COMM_HELD,
+                                 COMM_PAUSED, COMM_EVENTS)
+
+VERSIONS = ("pure", "forkjoin", "sentinel", "interop-blk", "interop-nonblk")
+
+
+def gs_block(block, top, left, bottom, right):
+    padded = np.pad(block, 1)
+    padded[0, 1:-1] = top
+    padded[-1, 1:-1] = bottom
+    padded[1:-1, 0] = left
+    padded[1:-1, -1] = right
+    return 0.25 * (padded[:-2, 1:-1] + padded[2:, 1:-1]
+                   + padded[1:-1, :-2] + padded[1:-1, 2:])
+
+
+# ---------------------------------------------------------------------------
+# real execution on the host runtime
+# ---------------------------------------------------------------------------
+def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
+             nby: int = 2, nbx: int = 4, bs: int = 32, iters: int = 3,
+             seed: int = 0):
+    """Returns (final grid, stats).
+
+    Dataflow: grids[it][gy][bx]; block (gy,bx) at iteration it reads
+    up/left from iteration it (spatial wavefront) and self/down/right from
+    it-1 (temporal wavefront) — the paper's Fig. 7 pattern.  Cross-rank
+    halos travel through a tac.CommWorld.
+    """
+    rng = np.random.default_rng(seed)
+    NY = n_ranks * nby
+    grids: Dict[int, list] = {
+        0: [[rng.standard_normal((bs, bs)) for _ in range(nbx)]
+            for _ in range(NY)]}
+    for it in range(1, iters + 1):
+        grids[it] = [[None] * nbx for _ in range(NY)]
+    halos: Dict = {}
+    zeros = np.zeros(bs)
+    world = tac.CommWorld(n_ranks)
+    tac.init(tac.TASK_MULTIPLE if version.startswith("interop")
+             else tac.THREAD_MULTIPLE)
+    rt = TaskRuntime(num_workers=workers)
+    rt.start()
+
+    def compute_block(gy, bx, it):
+        g_cur, g_prev = grids[it], grids[it - 1]
+        r = gy // nby
+        top = halos.get(("top", gy, bx, it))
+        if isinstance(top, tac.AsyncHandle):
+            top = top.result
+        if top is None:
+            top = g_cur[gy - 1][bx][-1] if gy > 0 else zeros
+        bottom = halos.get(("bot", gy, bx, it))
+        if isinstance(bottom, tac.AsyncHandle):
+            bottom = bottom.result
+        if bottom is None:
+            bottom = g_prev[gy + 1][bx][0] if gy < NY - 1 else zeros
+        left = g_cur[gy][bx - 1][:, -1] if bx > 0 else zeros
+        right = g_prev[gy][bx + 1][:, 0] if bx < nbx - 1 else zeros
+        grids[it][gy][bx] = gs_block(g_prev[gy][bx], top, left, bottom,
+                                     right)
+
+    def comm_pairs(it):
+        """(kind, src_rank, dst_rank, gy_src, gy_dst, bx) for iteration it.
+
+        'up' halo: rank r's top-row compute at `it` needs neighbour
+        (r-1)'s bottom row of iteration `it` (spatial wavefront) — sent as
+        soon as that block is computed.  'down' halo: needs neighbour
+        (r+1)'s top row of `it-1`.
+        """
+        out = []
+        for r in range(n_ranks):
+            for bx in range(nbx):
+                if r > 0:
+                    out.append(("dn", r - 1, r, r * nby - 1, r * nby, bx,
+                                it))       # their bottom@it -> my top halo
+                if r < n_ranks - 1:
+                    out.append(("up", r + 1, r, (r + 1) * nby,
+                                r * nby + nby - 1, bx, it))  # top@it-1
+        return out
+
+    def make_send(kind, src, gy_src, bx, it):
+        def send():
+            src_it = it if kind == "dn" else it - 1
+            world.isend(grids[src_it][gy_src][bx][-1 if kind == "dn" else 0]
+                        .copy(), src=src, dst=None or (src + 1 if kind ==
+                                                       "dn" else src - 1),
+                        tag=(kind, bx, it))
+        return send
+
+    def make_recv(kind, src, dst, gy_dst, bx, it):
+        hkey = ("top", gy_dst, bx, it) if kind == "dn" else \
+            ("bot", gy_dst, bx, it)
+
+        def recv():
+            h = world.irecv(src=src, dst=dst, tag=(kind, bx, it))
+            if version == "interop-nonblk":
+                tac.iwait(h)
+                halos[hkey] = h     # resolved by release time
+            else:
+                halos[hkey] = tac.wait(h)
+        return recv, hkey
+
+    for it in range(1, iters + 1):
+        pairs = comm_pairs(it)
+        if version in ("pure", "forkjoin"):
+            if version == "forkjoin":
+                rt.taskwait()   # barrier: previous iteration fully done
+            # sequential communication phase in the main thread
+            for kind, src, dst, gy_src, gy_dst, bx, _ in pairs:
+                if kind == "up":  # prev-iteration data: available now
+                    world.isend(grids[it - 1][gy_src][bx][0].copy(),
+                                src=src, dst=dst, tag=(kind, bx, it))
+                    h = world.irecv(src=src, dst=dst, tag=(kind, bx, it))
+                    halos[("bot", gy_dst, bx, it)] = h.result
+            # 'dn' halos for pure/forkjoin: computed this iteration —
+            # resolved by direct grid access below (single address space),
+            # matching the sequential-communication semantics.
+        else:
+            sentinel = [("comm-sentinel",)] if version == "sentinel" else []
+
+            def submit_pair(kind, src, dst, gy_src, gy_dst, bx):
+                def send(kind=kind, src=src, dst=dst, gy_src=gy_src, bx=bx,
+                         it=it):
+                    src_it = it if kind == "dn" else it - 1
+                    row = grids[src_it][gy_src][bx][-1 if kind == "dn"
+                                                    else 0]
+                    world.isend(row.copy(), src=src, dst=dst,
+                                tag=(kind, bx, it))
+                rt.submit(send, in_=[("blk", gy_src, bx,
+                                      it if kind == "dn" else it - 1)],
+                          inout=list(sentinel), label="comm",
+                          name=f"s{kind}[{gy_src},{bx}]@{it}")
+                recv, hkey = make_recv(kind, src, dst, gy_dst, bx, it)
+                rt.submit(recv, out=[hkey], inout=list(sentinel),
+                          label="comm", name=f"r{kind}[{gy_dst},{bx}]@{it}")
+
+            # 'up' halos carry it-1 data — submit their pairs up front.
+            # 'dn' halos carry same-iteration data: their send must be
+            # submitted AFTER the compute that writes the row (submission
+            # order defines data versions), interleaved below.
+            for kind, src, dst, gy_src, gy_dst, bx, _ in pairs:
+                if kind == "up":
+                    submit_pair(kind, src, dst, gy_src, gy_dst, bx)
+
+        dn_by_src = {}
+        for p in pairs:
+            if p[0] == "dn":
+                dn_by_src.setdefault((p[3], p[5]), p)  # (gy_src, bx)
+
+        for gy in range(NY):
+            r = gy // nby
+            for bx in range(nbx):
+                deps = [("blk", gy, bx, it - 1)]
+                if bx > 0:
+                    deps.append(("blk", gy, bx - 1, it))
+                if bx < nbx - 1:
+                    deps.append(("blk", gy, bx + 1, it - 1))
+                if gy > 0:
+                    if (gy - 1) // nby == r or version in ("pure",
+                                                           "forkjoin"):
+                        deps.append(("blk", gy - 1, bx, it))
+                    else:
+                        deps.append(("top", gy, bx, it))
+                if gy < NY - 1:
+                    if (gy + 1) // nby == r or version in ("pure",
+                                                           "forkjoin"):
+                        deps.append(("blk", gy + 1, bx, it - 1))
+                    else:
+                        deps.append(("bot", gy, bx, it))
+                if version == "pure":
+                    compute_block(gy, bx, it)
+                else:
+                    rt.submit(compute_block, gy, bx, it,
+                              out=[("blk", gy, bx, it)], in_=deps,
+                              label="compute", name=f"c[{gy},{bx}]@{it}")
+                    # boundary row produced -> launch its 'dn' exchange now
+                    p = dn_by_src.get((gy, bx))
+                    if p is not None and version not in ("pure",
+                                                         "forkjoin"):
+                        kind, src, dst, gy_src, gy_dst, bx2, _ = p
+                        submit_pair(kind, src, dst, gy_src, gy_dst, bx2)
+
+    rt.taskwait()
+    stats = dict(rt.stats)
+    rt.close()
+    return np.block(grids[iters]), stats
+
+
+# ---------------------------------------------------------------------------
+# simulated scaling (paper Figs. 9/11/12/13)
+# ---------------------------------------------------------------------------
+def build_sim_graph(version, *, n_ranks, nby, nbx, iters,
+                    t_block=1.0, t_comm=0.05, latency=0.1):
+    tasks: List[SimTask] = []
+    index: Dict[str, int] = {}
+
+    def add(rank, compute, kind=COMPUTE, start=(), events=(), name=""):
+        t = SimTask(len(tasks), rank, compute, kind=kind,
+                    start_deps=[(index[s], 0.0) for s in start
+                                if s and s in index],
+                    event_deps=[(index[e], latency) for e in events
+                                if e and e in index], name=name)
+        tasks.append(t)
+        index[name] = t.id
+
+    comm_kind = {"sentinel": COMM_HELD, "interop-blk": COMM_PAUSED,
+                 "interop-nonblk": COMM_EVENTS}.get(version, COMM_HELD)
+    NY = n_ranks * nby
+    last_comm = [None] * n_ranks
+
+    for it in range(iters):
+        if version not in ("pure", "forkjoin"):
+            # sends (chained for sentinel), then receives
+            sends, recvs = [], []
+            for r in range(n_ranks):
+                for bx in range(nbx):
+                    if r > 0:
+                        gy = r * nby
+                        sends.append((r - 1, f"c[{gy - 1},{bx}]@{it}",
+                                      f"sd[{gy - 1},{bx}]@{it}"))
+                        recvs.append((r, f"sd[{gy - 1},{bx}]@{it}",
+                                      f"rt[{gy},{bx}]@{it}"))
+                    if r < n_ranks - 1:
+                        gy = r * nby + nby - 1
+                        sends.append((r + 1,
+                                      f"c[{gy + 1},{bx}]@{it - 1}" if it
+                                      else "", f"su[{gy + 1},{bx}]@{it}"))
+                        recvs.append((r, f"su[{gy + 1},{bx}]@{it}",
+                                      f"rb[{gy},{bx}]@{it}"))
+            for rank, dep, name in sends:
+                chain = last_comm[rank] if version == "sentinel" else None
+                add(rank, t_comm, kind=COMPUTE,   # send is buffered: cheap
+                    start=[dep, chain or ""], name=name)
+                if version == "sentinel":
+                    last_comm[rank] = name
+            for rank, ev, name in recvs:
+                chain = last_comm[rank] if version == "sentinel" else None
+                add(rank, t_comm, kind=comm_kind, start=[chain or ""],
+                    events=[ev], name=name)
+                if version == "sentinel":
+                    last_comm[rank] = name
+
+        for r in range(n_ranks):
+            for ly in range(nby):
+                gy = r * nby + ly
+                for bx in range(nbx):
+                    deps = []
+                    if it:
+                        deps.append(f"c[{gy},{bx}]@{it - 1}")
+                        if version == "forkjoin":
+                            deps.append(f"barrier@{it - 1}")
+                        if bx + 1 < nbx:
+                            deps.append(f"c[{gy},{bx + 1}]@{it - 1}")
+                        if gy + 1 < NY:
+                            if (gy + 1) // nby == r or version in (
+                                    "pure", "forkjoin"):
+                                deps.append(f"c[{gy + 1},{bx}]@{it - 1}")
+                            else:
+                                deps.append(f"rb[{gy},{bx}]@{it}")
+                    if bx > 0:
+                        deps.append(f"c[{gy},{bx - 1}]@{it}")
+                    if gy > 0:
+                        if (gy - 1) // nby == r:
+                            deps.append(f"c[{gy - 1},{bx}]@{it}")
+                        elif version in ("pure", "forkjoin"):
+                            # sequential whole-boundary exchange: rank r
+                            # waits for rank r-1's ENTIRE iteration (the
+                            # Fig. 10a cascade)
+                            deps.extend(f"c[{gy - 1},{b2}]@{it}"
+                                        for b2 in range(nbx))
+                        else:
+                            deps.append(f"rt[{gy},{bx}]@{it}")
+                    add(r, t_block, start=deps, name=f"c[{gy},{bx}]@{it}")
+
+        if version == "forkjoin":
+            for r2 in range(n_ranks):
+                add(r2, 0.0,
+                    start=[f"c[{r2 * nby + ly},{bx}]@{it}"
+                           for ly in range(nby) for bx in range(nbx)],
+                    name=f"b[{r2}]@{it}")
+            add(0, 0.0, start=[f"b[{r2}]@{it}" for r2 in range(n_ranks)],
+                name=f"barrier@{it}")
+    return tasks
+
+
+def simulate_version(version, *, n_ranks, workers=48, nby=4, nbx=16,
+                     iters=10, t_block=1.0):
+    if version == "pure":
+        workers = 1   # Pure MPI: one sequential flow per rank
+    tasks = build_sim_graph(version, n_ranks=n_ranks, nby=nby, nbx=nbx,
+                            iters=iters, t_block=t_block)
+    sim = Simulator(n_ranks, workers, task_overhead=0.002,
+                    resume_overhead=0.01)
+    return sim.run(tasks).makespan
+
+
+# ---------------------------------------------------------------------------
+def bench(print_fn=print):
+    rows = []
+    ref, _ = run_real("pure")
+    for v in VERSIONS[1:]:
+        out, _ = run_real(v)
+        err = float(np.abs(out - ref).max())
+        assert err < 1e-10, (v, err)
+
+    for v in VERSIONS:
+        t0 = time.monotonic()
+        _, stats = run_real(v)
+        dt = (time.monotonic() - t0) / 3
+        rows.append((f"gs_real_{v}", dt * 1e6,
+                     f"blocks={stats.get('task_blocks', 0)}"
+                     f";threads={stats.get('threads_spawned', 0)}"))
+
+    # strong scaling (Fig. 9): fixed 32 block-rows total, split over ranks
+    base_s = simulate_version("pure", n_ranks=1, nby=32)
+    for v in VERSIONS:
+        for n in (1, 2, 4, 8, 16):
+            mk = simulate_version(v, n_ranks=n, nby=32 // n)
+            rows.append((f"gs_strong_{v}_r{n}", mk * 1e6,
+                         f"speedup={base_s / mk:.2f}"))
+
+    # weak scaling (Fig. 11): 4 block-rows per rank
+    base_w = simulate_version("pure", n_ranks=1)
+    for v in VERSIONS:
+        for n in (1, 2, 4, 8, 16):
+            mk = simulate_version(v, n_ranks=n)
+            rows.append((f"gs_weak_{v}_r{n}", mk * 1e6,
+                         f"efficiency={base_w / mk:.2f}"))
+
+    base6 = simulate_version("pure", n_ranks=1, iters=6)
+    for v in ("interop-blk", "interop-nonblk"):
+        for scale, label in ((1, "1024bs"), (2, "512bs"), (4, "256bs")):
+            mk = simulate_version(v, n_ranks=8, nby=4 * scale,
+                                  nbx=16 * scale, iters=6,
+                                  t_block=1.0 / (scale * scale))
+            rows.append((f"gs_gran_{v}_{label}", mk * 1e6,
+                         f"speedup={base6 / mk:.2f}"))
+    for r in rows:
+        print_fn(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    bench()

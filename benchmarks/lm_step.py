@@ -1,0 +1,78 @@
+"""LM train/decode step timings on CPU (smoke configs, all 10 archs).
+
+Not a TPU number — a regression harness for the substrate: per-arch train
+step and decode step wall time at smoke scale, plus tokens/s derived.
+
+CSV: name,us_per_call,derived
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, optim
+from repro.models import model, inputs
+from repro.runtime import steps
+from repro.runtime.sharding import ShardingPolicy
+from repro.launch.mesh import local_mesh
+
+
+def bench(print_fn=print, archs=None):
+    rows = []
+    archs = archs or list(configs.ARCHS)
+    opt_cfg = optim.OptimConfig()
+    mesh = local_mesh(model=1)
+    B, S = 2, 64
+    for arch in archs:
+        cfg = configs.smoke(arch)
+        key = jax.random.PRNGKey(0)
+        state = steps.init_train_state(cfg, opt_cfg, key)
+        batch = inputs.make_batch(cfg, batch=B, seq=S, key=key)
+        abatch = jax.eval_shape(lambda: batch)
+        policy = ShardingPolicy(fsdp=False, tp=False, sp=False, remat=None)
+        with mesh:
+            jitted, _ = steps.build_train_step(
+                cfg, mesh, policy, opt_cfg, abstract_batch=abatch,
+                donate=False)
+            state, m = jitted(state, batch)       # compile + warmup
+            jax.block_until_ready(m["loss"])
+            t0 = time.monotonic()
+            n = 3
+            for _ in range(n):
+                state, m = jitted(state, batch)
+            jax.block_until_ready(m["loss"])
+            dt = (time.monotonic() - t0) / n
+        rows.append((f"train_step_{arch}", dt * 1e6,
+                     f"tok_per_s={B * S / dt:.0f}"))
+
+        if cfg.causal:
+            params = state.params
+            cache = model.init_cache(cfg, B, S)
+            dec_batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+            with mesh:
+                dec, a_cache = steps.build_decode_step(
+                    cfg, mesh, policy, batch=B, cache_len=S,
+                    abstract_batch=jax.eval_shape(lambda: dec_batch),
+                    donate=False)
+                logits, cache = dec(params, cache, dec_batch,
+                                    jnp.int32(0))
+                jax.block_until_ready(logits)
+                t0 = time.monotonic()
+                n = 10
+                for i in range(n):
+                    logits, cache = dec(params, cache, dec_batch,
+                                        jnp.int32(i + 1))
+                jax.block_until_ready(logits)
+                dt = (time.monotonic() - t0) / n
+            rows.append((f"decode_step_{arch}", dt * 1e6,
+                         f"tok_per_s={B / dt:.0f}"))
+    for r in rows:
+        print_fn(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    bench()

@@ -1,0 +1,68 @@
+"""Gradient-synchronisation schedule benchmark (Level-B TAMPI adaptation).
+
+Compares the three in-graph communication schedules (core/overlap.py):
+``fused`` (fork-join analogue), ``bucketed`` (interop analogue) and
+``sentinel`` (artificial serialisation) on a real LM train step:
+
+* REAL execution wall time on the local mesh (DP-only — CPU backend
+  restriction documented in tests/test_distributed.py);
+* structural collective counts from the pre-optimisation StableHLO (the
+  program as written — the TPU combiner threshold is the production knob
+  that trades these back, see EXPERIMENTS.md §Perf).
+
+CSV: name,us_per_call,derived
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro import configs, optim
+from repro.models import inputs
+from repro.runtime import steps
+from repro.runtime.sharding import ShardingPolicy
+from repro.launch.mesh import make_mesh
+
+
+def bench(print_fn=print):
+    rows = []
+    cfg = configs.smoke("granite_3_2b").scaled(dtype="float32", n_layers=8)
+    opt_cfg = optim.OptimConfig()
+    key = jax.random.PRNGKey(0)
+    state = steps.init_train_state(cfg, opt_cfg, key)
+    batch = inputs.make_batch(cfg, batch=8, seq=64, key=key)
+    abatch = jax.eval_shape(lambda: batch)
+    mesh = make_mesh((1, 1), ("data", "model"))  # 1-core box: schedule
+    # structure is mesh-size independent; wall time measures overheads
+
+    for mode in ("fused", "bucketed", "sentinel"):
+        policy = ShardingPolicy(fsdp=False, tp=False, sp=False, remat=None,
+                                grad_sync=mode)
+        with mesh:
+            make = steps.build_train_step_manual(
+                cfg, mesh, policy, opt_cfg, bucket_bytes=1 << 16)
+            f = make(jax.eval_shape(lambda: state), abatch)
+            lowered = f.lower(state, batch)
+            txt = lowered.as_text()
+            n_ar = txt.count("all_reduce")
+            n_barrier = txt.count("optimization_barrier")
+            compiled = lowered.compile()
+            s, m = compiled(state, batch)          # warmup
+            jax.block_until_ready(m["loss"])
+            t0 = time.monotonic()
+            n = 5
+            for _ in range(n):
+                s, m = compiled(s, batch)
+            jax.block_until_ready(m["loss"])
+            dt = (time.monotonic() - t0) / n
+        rows.append((f"gradsync_{mode}", dt * 1e6,
+                     f"all_reduces={n_ar};barriers={n_barrier}"))
+    for r in rows:
+        print_fn(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    bench()

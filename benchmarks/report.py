@@ -1,0 +1,91 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from dry-run
+JSON records.
+
+  PYTHONPATH=src python -m benchmarks.report results/dryrun_single.json \
+      results/dryrun_multi.json > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from .roofline import analyze, PEAK_FLOPS, HBM_BW, LINK_BW
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(records):
+    out = ["| arch | shape | mesh | compile s | HBM GiB/dev | HLO GFLOP/dev "
+           "| coll GiB wire/dev | coll ops |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                       f"| FAILED | — | — | — | — |")
+            continue
+        c = r["collectives"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_s']:.1f} "
+            f"| {fmt_bytes(r['memory']['peak_device_bytes'])} "
+            f"| {r['cost']['flops'] / 1e9:.0f} "
+            f"| {c['total_wire_bytes'] / 2**30:.2f} "
+            f"| {int(sum(c['counts'].values()))} |")
+    return "\n".join(out)
+
+
+def roofline_table(records):
+    out = ["| arch | shape | t_compute s | t_mem adj s | t_mem raw s "
+           "| t_collective s | dominant | useful | frac | fits HBM |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        a = analyze(r)
+        if a is None:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — "
+                       f"| FAILED | — | — | — |")
+            continue
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.3f} "
+            f"| {a['t_memory_s']:.3f} | {a['t_memory_raw_s']:.3f} "
+            f"| {a['t_collective_s']:.3f} "
+            f"| **{a['dominant']}** | {a['useful_ratio']:.2f} "
+            f"| {a['roofline_fraction']:.3f} "
+            f"| {'yes' if a['fits_hbm'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def collective_mix(records):
+    out = ["| arch | shape | all-reduce | all-gather | reduce-scatter "
+           "| all-to-all | permute |", "|---|---|---|---|---|---|---|"]
+    for r in records:
+        if not r.get("ok"):
+            continue
+        w = r["collectives"]["wire_bytes"]
+        out.append(f"| {r['arch']} | {r['shape']} | "
+                   + " | ".join(f"{w.get(k, 0) / 2**30:.2f}"
+                                for k in ("all-reduce", "all-gather",
+                                          "reduce-scatter", "all-to-all",
+                                          "collective-permute")) + " |")
+    return "\n".join(out)
+
+
+def main():
+    for path in sys.argv[1:]:
+        records = json.load(open(path))
+        print(f"\n### Records: {path} "
+              f"({sum(1 for r in records if r.get('ok'))}/{len(records)} ok)"
+              f"\n")
+        print("#### Dry-run\n")
+        print(dryrun_table(records))
+        print("\n#### Roofline (v5e: 197 TF bf16, 819 GB/s HBM, "
+              "50 GB/s link)\n")
+        print(roofline_table(records))
+        print("\n#### Collective wire-bytes mix (GiB/dev)\n")
+        print(collective_mix(records))
+
+
+if __name__ == "__main__":
+    main()

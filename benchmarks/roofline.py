@@ -1,0 +1,98 @@
+"""Roofline analysis over dry-run records (§Roofline deliverable).
+
+Reads the JSON written by ``repro.launch.dryrun`` and derives, per
+(arch × shape × mesh) cell, the three roofline terms on TPU v5e:
+
+  compute   = HLO_FLOPs_per_device / PEAK_FLOPS          (197 TFLOP/s bf16)
+  memory    = HLO_bytes_per_device / HBM_BW              (819 GB/s)
+  collective= wire_bytes_per_device / LINK_BW            (~50 GB/s/link ICI)
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for training and
+2·N·D for inference steps, the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs × n_devices), the dominant term, and the achieved
+roofline fraction  model_time_bound / max(term)s.
+
+CSV: name,us_per_call,derived   (us_per_call = dominant term in µs)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    n_dev = rec["n_devices"]
+    flops_dev = rec["cost"]["flops"]
+    bytes_dev = rec["cost"]["bytes_accessed"]
+    vmem_dev = rec["cost"].get("vmem_resident_bytes", 0.0)
+    wire_dev = rec["collectives"]["total_wire_bytes"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    # kernel-adjusted: tiles tagged vmem-resident stay in VMEM inside the
+    # validated Pallas kernels on TPU; the raw jnp-path number is also kept.
+    t_memory = (bytes_dev - vmem_dev) / HBM_BW
+    t_memory_raw = bytes_dev / HBM_BW
+    t_coll = wire_dev / LINK_BW
+
+    # useful model flops for this step
+    mult = 6 if rec["kind"] == "train" else 2
+    n_params = rec["active_params"]
+    model_flops = mult * n_params * rec["tokens"]
+    t_model = model_flops / (n_dev * PEAK_FLOPS)
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_memory_raw_s": t_memory_raw,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(flops_dev * n_dev, 1.0),
+        "roofline_fraction": t_model / max(bound, 1e-12),
+        "hbm_gib": rec["memory"]["peak_device_bytes"] / 2**30,
+        "fits_hbm": rec["memory"]["peak_device_bytes"] < 16 * 2**30,
+    }
+
+
+def bench(print_fn=print, path: str = "results/dryrun_single.json"):
+    rows = []
+    if not os.path.exists(path):
+        print_fn(f"roofline,0.0,skipped (no {path}; run repro.launch.dryrun"
+                 " --all --out results/dryrun_single.json)")
+        return rows
+    with open(path) as f:
+        records = json.load(f)
+    for rec in records:
+        a = analyze(rec)
+        if a is None:
+            rows.append((f"roofline_{rec['arch']}_{rec['shape']}"
+                         f"_{rec.get('mesh', '?')}", 0.0, "FAILED"))
+            continue
+        name = f"roofline_{a['arch']}_{a['shape']}_{a['mesh']}"
+        dom_us = {"compute": a["t_compute_s"], "memory": a["t_memory_s"],
+                  "collective": a["t_collective_s"]}[a["dominant"]] * 1e6
+        rows.append((name, dom_us,
+                     f"dominant={a['dominant']}"
+                     f";frac={a['roofline_fraction']:.3f}"
+                     f";useful={a['useful_ratio']:.2f}"
+                     f";hbm={a['hbm_gib']:.1f}GiB"))
+    for r in rows:
+        print_fn(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    bench(path=sys.argv[1] if len(sys.argv) > 1 else
+          "results/dryrun_single.json")

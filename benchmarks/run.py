@@ -1,0 +1,34 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+  gauss_seidel   — paper §7.1 Figs. 9-13 (5 versions, scaling, granularity)
+  ifsker         — paper §7.2 Fig. 14
+  overlap_bench  — Level-B grad-sync schedules (beyond-paper)
+  lm_step        — per-arch substrate regression timings
+  roofline       — §Roofline terms from the dry-run records (if present)
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    from . import gauss_seidel, ifsker, overlap_bench, lm_step, roofline
+    for mod in (gauss_seidel, ifsker, overlap_bench, lm_step, roofline):
+        name = mod.__name__.split(".")[-1]
+        print(f"# --- {name} ---")
+        try:
+            mod.bench()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,48 @@
+"""Gauss–Seidel demo (paper §7.1): run all five program versions and show
+that removing artificial communication dependencies — the paper's
+contribution — is what unlocks the wavefront parallelism.
+
+Prints per-version wall time, runtime statistics (pauses, spawned threads)
+and the simulated 16-rank speedups.
+
+Run:  PYTHONPATH=src python examples/gauss_seidel.py
+"""
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.gauss_seidel import run_real, simulate_version, VERSIONS
+
+
+def main():
+    print("real execution (2 logical ranks x 2 workers, 8x4 blocks):")
+    ref, _ = run_real("pure")
+    for v in VERSIONS:
+        t0 = time.monotonic()
+        out, stats = run_real(v)
+        dt = time.monotonic() - t0
+        err = float(np.abs(out - ref).max())
+        assert err < 1e-10, (v, err)
+        print(f"  {v:16s} {dt * 1e3:7.1f} ms   pauses="
+              f"{stats.get('task_blocks', 0):<3d} "
+              f"spawned_threads={stats.get('threads_spawned', 0):<3d} "
+              f"(identical numerics: max|Δ|={err:.1e})")
+
+    print("\nsimulated speedup vs Pure-MPI@1rank "
+          "(48 workers/rank, paper Fig. 9 analogue):")
+    base = simulate_version("pure", n_ranks=1, nby=32)
+    for v in VERSIONS:
+        sp = [base / simulate_version(v, n_ranks=n, nby=32 // n)
+              for n in (1, 4, 16)]
+        print(f"  {v:16s} r1={sp[0]:5.2f}  r4={sp[1]:5.2f} r16={sp[2]:5.2f}")
+    print("\nThe Interop versions scale because communication tasks carry "
+          "no artificial dependencies\n(blocking mode pauses tasks; "
+          "non-blocking mode defers dependency release — paper §6).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Serving example: batched greedy decoding with prefill→decode cache
+handoff on a hybrid (Mamba2 + shared attention) architecture — the cache
+carries both SSM states and KV tensors.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-2.7b]
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="zamba2-2.7b")
+    p.add_argument("--gen", type=int, default=16)
+    args = p.parse_args()
+    rc = serve.main(["--arch", args.arch, "--scale", "smoke",
+                     "--batch", "2", "--prompt-len", "32",
+                     "--gen", str(args.gen)])
+    raise SystemExit(rc)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end training driver example: train a ~10M-param granite-family
+model for a few hundred steps on the synthetic token stream and verify the
+loss drops substantially (the stream has learnable structure: every even
+position repeats the previous token).
+
+Exercises the full substrate: sharded train step, async prefetch (host
+task runtime), async checkpointing (external events), restart determinism.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--arch", default="granite-3-2b")
+    args = p.parse_args()
+
+    ckpt = tempfile.mkdtemp(prefix="repro-train-")
+    rc = train.main([
+        "--arch", args.arch, "--scale", "smoke",
+        "--steps", str(args.steps), "--batch", "16", "--seq", "128",
+        "--lr", "3e-3", "--warmup", "30",
+        "--ckpt-dir", ckpt, "--ckpt-every", "100",
+        "--log-every", "25",
+    ])
+    raise SystemExit(rc)
+
+
+if __name__ == "__main__":
+    main()

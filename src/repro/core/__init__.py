@@ -1,0 +1,32 @@
+"""repro.core — the paper's contribution: task runtime + Task-Aware Collectives.
+
+Exports the two generic runtime APIs proposed by the paper (§4) with their
+original names, the task runtime that implements them, and the TAC library
+(the TAMPI analogue for JAX).
+"""
+
+from .events import (BlockingContext, EventCounter,
+                     get_current_blocking_context, block_current_task,
+                     unblock_task, get_current_event_counter,
+                     increase_current_task_event_counter,
+                     decrease_task_event_counter, current_task)
+from .polling import PollingRegistry
+from .taskgraph import Task, TaskGraph
+from .executor import TaskRuntime, TaskError
+from . import tac
+from . import simulate
+
+__all__ = [
+    # pause/resume API (§4.1)
+    "get_current_blocking_context", "block_current_task", "unblock_task",
+    # external events API (§4.3)
+    "get_current_event_counter", "increase_current_task_event_counter",
+    "decrease_task_event_counter",
+    # polling services API (§4.2) — register/unregister live on the registry
+    "PollingRegistry",
+    # runtime
+    "Task", "TaskGraph", "TaskRuntime", "TaskError", "BlockingContext",
+    "EventCounter", "current_task",
+    # TAMPI analogue
+    "tac", "simulate",
+]

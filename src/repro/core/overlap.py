@@ -1,0 +1,193 @@
+"""In-graph communication schedules — the Level-B TAMPI adaptation.
+
+On a TPU pod the performance-critical communication lives *inside* one XLA
+program, where "task dependencies" are HLO dataflow edges and "the
+scheduler" is XLA's latency-hiding scheduler.  The paper's insight maps to
+schedule construction: present the gradient synchronisation as
+
+* ``fused``    — ONE all-reduce over the whole flattened gradient at the end
+                 of backward.  This is the Fork-Join/Pure-MPI pattern: a
+                 barrier-style phase boundary; nothing can overlap.
+* ``bucketed`` — one all-reduce per parameter bucket with NO artificial
+                 dependencies between them, so each reduction is issued as
+                 soon as its producers are done and overlaps the remaining
+                 backward compute.  This is the Interop/TAMPI pattern —
+                 dependencies alone order the collectives.
+* ``sentinel`` — the bucketed collectives chained through explicit tokens
+                 (``lax.optimization_barrier``), serialising them exactly
+                 like the artificial sentinel dependency of paper §6.3/§7.1.
+
+These run inside ``jax.shard_map`` manual over the DP axes (the model axis
+stays auto/GSPMD).  Structural verification = collective count/order in the
+lowered HLO; benchmarks/overlap_bench.py measures wall time on the local
+mesh and EXPERIMENTS.md §Perf reports the roofline deltas.
+
+``compress="bf16"`` halves the bytes on the wire (cast → reduce → cast), an
+orthogonal distributed-optimization trick.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BUCKET_BYTES = 4 << 20
+
+
+def _flatten_with_sizes(grads):
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(l.size) for l in leaves]
+    return leaves, treedef, shapes, sizes
+
+
+def _make_buckets(sizes: Sequence[int], bucket_bytes: int,
+                  bytes_per_el: int = 4) -> List[List[int]]:
+    """Greedy size-based bucketing of leaf indices (DDP-style)."""
+    buckets: List[List[int]] = []
+    cur: List[int] = []
+    acc = 0
+    for i, s in enumerate(sizes):
+        cur.append(i)
+        acc += s * bytes_per_el
+        if acc >= bucket_bytes:
+            buckets.append(cur)
+            cur, acc = [], 0
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def sync_grads(grads, *, axes, mode: str = "bucketed",
+               bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+               compress: Optional[str] = None, mean: bool = True):
+    """Reduce gradients over the (manual) DP axes with a chosen schedule.
+
+    Must be called inside ``shard_map`` manual over ``axes``.
+    """
+    if isinstance(axes, str):
+        axes = (axes,)
+    leaves, treedef, shapes, sizes = _flatten_with_sizes(grads)
+    nshards = 1
+    # psum over multiple axes: pass the tuple directly.
+    axis_arg = tuple(axes)
+
+    def reduce_block(x):
+        if compress == "int8":
+            assert len(axis_arg) == 1, "int8 path: single reduction axis"
+            return quantized_psum_mean(x.astype(jnp.float32),
+                                       axis_arg[0]) * \
+                jax.lax.axis_size(axis_arg[0])  # sync_grads divides later
+        if compress == "bf16":
+            x = x.astype(jnp.bfloat16)
+        x = jax.lax.psum(x, axis_arg)
+        return x.astype(jnp.float32)
+
+    if mode == "fused":
+        flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                                for l in leaves])
+        flat = reduce_block(flat)
+        out, off = [], 0
+        for sh, sz in zip(shapes, sizes):
+            out.append(flat[off:off + sz].reshape(sh))
+            off += sz
+    elif mode in ("bucketed", "sentinel"):
+        buckets = _make_buckets(sizes, bucket_bytes)
+        reduced: List[Any] = [None] * len(leaves)
+        token = None
+        for b in buckets:
+            chunk = jnp.concatenate(
+                [leaves[i].astype(jnp.float32).reshape(-1) for i in b])
+            if mode == "sentinel" and token is not None:
+                # Serialise on the previous collective — the artificial
+                # dependency the paper's technique removes.
+                chunk, _ = jax.lax.optimization_barrier((chunk, token))
+            chunk = reduce_block(chunk)
+            token = jnp.sum(chunk[:1])
+            off = 0
+            for i in b:
+                reduced[i] = chunk[off:off + sizes[i]].reshape(shapes[i])
+                off += sizes[i]
+        out = reduced
+    else:
+        raise ValueError(f"unknown grad sync mode {mode!r}")
+
+    if mean:
+        # DP world size is static inside shard_map — no collective needed.
+        ws = 1.0
+        for a in axis_arg:
+            ws *= jax.lax.axis_size(a)
+        out = [o / ws for o in out]
+    return treedef.unflatten([o.astype(l.dtype)
+                              for o, l in zip(out, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized reduction (gradient compression, 4x wire reduction)
+# ---------------------------------------------------------------------------
+def quantized_psum_mean(x: jax.Array, axis: str) -> jax.Array:
+    """Mean-reduce a flat fp32 vector over ``axis`` with int8 on the wire.
+
+    reduce-scatter leg: per-rank symmetric int8 quantisation (scales
+    exchanged as scalars), shards moved with an int8 ``all_to_all``,
+    dequantised and summed in fp32; all-gather leg: the reduced shard is
+    re-quantised and gathered in int8.  Wire bytes ≈ 2·n·1B vs 2·n·4B for
+    an fp32 ring all-reduce.  Quantisation error is bounded by
+    max|g|/127 per element per leg (no error feedback — acceptable for
+    gradients under Adam's normalisation; see EXPERIMENTS.md).
+    Must run inside shard_map manual over ``axis``.
+    """
+    world = jax.lax.axis_size(axis)
+    n = x.size
+    pad = (-n) % world
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    qs = q.reshape(world, -1)
+    # my shard of everyone's quantised gradient (int8 on the wire)
+    recv = jax.lax.all_to_all(qs, axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    scales = jax.lax.all_gather(scale, axis)            # (world,) fp32
+    partial = jnp.sum(recv.astype(jnp.float32)
+                      * scales[:, None], axis=0) / world
+    # gather the reduced shards back, again in int8
+    s2 = jnp.maximum(jnp.max(jnp.abs(partial)), 1e-20) / 127.0
+    q2 = jnp.clip(jnp.round(partial / s2), -127, 127).astype(jnp.int8)
+    gathered = jax.lax.all_gather(q2, axis)             # (world, n/world) s8
+    s2s = jax.lax.all_gather(s2, axis)
+    out = (gathered.astype(jnp.float32) * s2s[:, None]).reshape(-1)
+    return out[:n] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# Halo exchange schedules (Gauss–Seidel, paper §7.1 at Level B)
+# ---------------------------------------------------------------------------
+def halo_exchange_rows(x, axis_name: str, *, width: int = 1
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Exchange boundary rows with both neighbours along a sharded axis.
+
+    x: the local (rows, cols) block of a 1-D row decomposition.  Returns
+    (top_halo, bottom_halo) received from the previous/next shard (zeros at
+    the domain edges).  Inside shard_map manual over ``axis_name``.
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    down = [(i, (i + 1) % n) for i in range(n)]   # send my last rows down
+    up = [(i, (i - 1) % n) for i in range(n)]     # send my first rows up
+    from_above = jax.lax.ppermute(x[-width:], axis_name, down)
+    from_below = jax.lax.ppermute(x[:width], axis_name, up)
+    top = jnp.where(idx == 0, jnp.zeros_like(from_above), from_above)
+    bot = jnp.where(idx == n - 1, jnp.zeros_like(from_below), from_below)
+    return top, bot
+
+
+def chained(x, token):
+    """Serialise ``x`` on ``token`` (sentinel-style artificial dependency)."""
+    if token is None:
+        return x, jnp.zeros((), x.dtype)
+    x, _ = jax.lax.optimization_barrier((x, token))
+    return x, jnp.sum(jnp.ravel(x)[:1]).astype(x.dtype)

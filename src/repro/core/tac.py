@@ -1,0 +1,381 @@
+"""TAC — Task-Aware Collectives: the TAMPI analogue for JAX (paper §6).
+
+TAMPI intercepts MPI calls and re-expresses them against the pause/resume and
+external-events APIs.  In JAX the "MPI layer" is the asynchronous dispatch
+machinery: every ``jax.Array`` is a future (``.is_ready()`` is the
+non-blocking completion test, ``jax.block_until_ready`` the blocking wait),
+``jax.device_put`` is an asynchronous transfer, and host-side channels give
+point-to-point semantics between logical ranks.  TAC wraps those operations
+in the two modes the paper defines:
+
+* **Blocking mode** (§6.1, Fig. 3): ``tac.wait(handle)`` from inside a task
+  converts a blocking wait into *test → register ticket → pause task*; a
+  polling service tests the pending tickets and unblocks tasks on
+  completion.  The hardware thread never blocks inside the "MPI library".
+
+* **Non-blocking mode** (§6.2, Fig. 4): ``tac.iwait(handle)`` /
+  ``tac.iwaitall(handles)`` bind the handles to the calling task's event
+  counter and return immediately.  The task may finish; its dependencies are
+  released only when the bound operations complete.  No context switch, no
+  live stack, no extra scheduler round trips.
+
+Both modes are enabled by initialising TAC with the ``TASK_MULTIPLE``
+threading level (§6.3).  Without it, the wrappers fall back to the plain
+blocking wait — the "PMPI" path of Fig. 3/4 — and programs must serialise
+communication tasks themselves (the *sentinel* pattern, §7.1).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+
+from .events import (current_task, get_current_blocking_context,
+                     get_current_event_counter,
+                     increase_current_task_event_counter,
+                     decrease_task_event_counter, block_current_task,
+                     unblock_task, BlockingContext, EventCounter)
+from .executor import TaskRuntime
+
+# -- threading levels (§6.3) -------------------------------------------------
+THREAD_SINGLE = 0
+THREAD_FUNNELED = 1
+THREAD_SERIALIZED = 2
+THREAD_MULTIPLE = 3
+TASK_MULTIPLE = 4  # monotonically greater than THREAD_MULTIPLE (§6.3)
+
+_provided_level = THREAD_MULTIPLE
+_level_lock = threading.Lock()
+
+
+def init(required: int = TASK_MULTIPLE) -> int:
+    """Initialise TAC, requesting a threading level (cf. MPI_Init_thread).
+
+    Returns the *provided* level.  ``TASK_MULTIPLE`` is always available in
+    this runtime; programs may still request less to emulate legacy MPI
+    libraries (the benchmarks use this to build the Sentinel versions).
+    """
+    global _provided_level
+    with _level_lock:
+        _provided_level = min(required, TASK_MULTIPLE)
+        return _provided_level
+
+
+def query_thread() -> int:
+    return _provided_level
+
+
+def is_enabled() -> bool:
+    """True when the TASK_MULTIPLE interoperability mechanism is active."""
+    return _provided_level >= TASK_MULTIPLE
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous handles ("MPI_Request" analogues)
+# ---------------------------------------------------------------------------
+class AsyncHandle:
+    """A testable/waitable in-flight operation."""
+
+    def test(self) -> bool:
+        raise NotImplementedError
+
+    def wait(self) -> Any:
+        """OS-level blocking wait (the 'PMPI' path). Returns the result."""
+        raise NotImplementedError
+
+    @property
+    def result(self) -> Any:
+        return getattr(self, "_result", None)
+
+
+class ArrayHandle(AsyncHandle):
+    """Completion of asynchronously dispatched JAX arrays.
+
+    ``jax.Array.is_ready()`` is the non-blocking completion test — the exact
+    analogue of ``MPI_Test`` for XLA's async dispatch.
+    """
+
+    def __init__(self, value: Any) -> None:
+        self._result = value
+        self._leaves = [x for x in jax.tree_util.tree_leaves(value)
+                        if hasattr(x, "is_ready")]
+
+    def test(self) -> bool:
+        return all(x.is_ready() for x in self._leaves)
+
+    def wait(self) -> Any:
+        jax.block_until_ready(self._result)
+        return self._result
+
+
+class EventHandle(AsyncHandle):
+    """A manually completed handle (asynchronous host work, I/O, ...)."""
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._result: Any = None
+
+    def complete(self, result: Any = None) -> None:
+        self._result = result
+        self._event.set()
+
+    def test(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self) -> Any:
+        self._event.wait()
+        return self._result
+
+
+class FutureHandle(AsyncHandle):
+    """Adapter for ``concurrent.futures.Future``."""
+
+    def __init__(self, future: Any) -> None:
+        self._future = future
+
+    def test(self) -> bool:
+        return self._future.done()
+
+    def wait(self) -> Any:
+        return self._future.result()
+
+    @property
+    def result(self) -> Any:
+        return self._future.result() if self._future.done() else None
+
+
+class CompositeHandle(AsyncHandle):
+    def __init__(self, handles: Sequence[AsyncHandle]) -> None:
+        self._handles = list(handles)
+
+    def test(self) -> bool:
+        return all(h.test() for h in self._handles)
+
+    def wait(self) -> Any:
+        return [h.wait() for h in self._handles]
+
+    @property
+    def result(self) -> Any:
+        return [h.result for h in self._handles]
+
+
+def run_async(fn: Callable[..., Any], *args: Any, **kwargs: Any) -> ArrayHandle:
+    """Dispatch a (jitted) computation and return its completion handle.
+
+    JAX dispatch is asynchronous, so this returns as soon as the work is
+    enqueued on the device — the handle completes when the result arrays are
+    materialised.
+    """
+    return ArrayHandle(fn(*args, **kwargs))
+
+
+def transfer(value: Any, target: Any) -> ArrayHandle:
+    """Asynchronous device transfer (the point-to-point data motion)."""
+    return ArrayHandle(jax.device_put(value, target))
+
+
+# ---------------------------------------------------------------------------
+# CommWorld: logical ranks with MPI point-to-point semantics
+# ---------------------------------------------------------------------------
+class _SendHandle(EventHandle):
+    def __init__(self, payload: Any, synchronous: bool) -> None:
+        super().__init__()
+        self.payload = payload
+        if not synchronous:
+            # Buffered send: locally complete immediately (MPI_Isend on a
+            # small message); synchronous send completes on match (MPI_Issend).
+            self.complete(payload)
+
+
+class _RecvHandle(EventHandle):
+    pass
+
+
+class CommWorld:
+    """``size`` logical ranks with ordered, tagged point-to-point messaging.
+
+    Matching follows MPI semantics: messages between the same (src, dst, tag)
+    triple are non-overtaking; matching is eager (performed at post time
+    under the world lock).  Payloads are passed by reference — callers
+    sharing device arrays get zero-copy semantics on a single host, which is
+    the honest analogue of intra-node MPI.
+    """
+
+    def __init__(self, size: int) -> None:
+        self.size = size
+        self._lock = threading.Lock()
+        self._msgs: dict = {}   # (src, dst, tag) -> list[_SendHandle]
+        self._recvs: dict = {}  # (src, dst, tag) -> list[_RecvHandle]
+        self.stats = {"messages": 0, "bytes": 0}
+
+    def _key(self, src: int, dst: int, tag: Any) -> Tuple[int, int, Any]:
+        return (src, dst, tag)
+
+    def isend(self, payload: Any, *, src: int, dst: int, tag: Any = 0,
+              synchronous: bool = False) -> _SendHandle:
+        if not (0 <= src < self.size and 0 <= dst < self.size):
+            raise ValueError(f"rank out of range: {src}->{dst}")
+        h = _SendHandle(payload, synchronous)
+        key = self._key(src, dst, tag)
+        with self._lock:
+            self.stats["messages"] += 1
+            recvs = self._recvs.get(key)
+            if recvs:
+                r = recvs.pop(0)
+                r.complete(payload)
+                h.complete(payload)
+            else:
+                self._msgs.setdefault(key, []).append(h)
+        return h
+
+    def irecv(self, *, src: int, dst: int, tag: Any = 0) -> _RecvHandle:
+        key = self._key(src, dst, tag)
+        r = _RecvHandle()
+        with self._lock:
+            msgs = self._msgs.get(key)
+            if msgs:
+                s = msgs.pop(0)
+                s.complete(s.payload)
+                r.complete(s.payload)
+            else:
+                self._recvs.setdefault(key, []).append(r)
+        return r
+
+    # Blocking conveniences (intercepted like MPI_Recv/MPI_Ssend, Fig. 3).
+    def recv(self, *, src: int, dst: int, tag: Any = 0) -> Any:
+        return wait(self.irecv(src=src, dst=dst, tag=tag))
+
+    def send(self, payload: Any, *, src: int, dst: int, tag: Any = 0) -> None:
+        wait(self.isend(payload, src=src, dst=dst, tag=tag))
+
+    def ssend(self, payload: Any, *, src: int, dst: int, tag: Any = 0) -> None:
+        wait(self.isend(payload, src=src, dst=dst, tag=tag, synchronous=True))
+
+
+# ---------------------------------------------------------------------------
+# Ticket pool + polling service (Figs. 3 & 4, bottom halves)
+# ---------------------------------------------------------------------------
+class _Ticket:
+    __slots__ = ("handle", "waiter", "counter", "n_events")
+
+    def __init__(self, handle: AsyncHandle,
+                 waiter: Optional[BlockingContext] = None,
+                 counter: Optional[EventCounter] = None,
+                 n_events: int = 1) -> None:
+        self.handle = handle
+        self.waiter = waiter      # blocking mode: context to unblock
+        self.counter = counter    # non-blocking mode: counter to decrease
+        self.n_events = n_events
+
+
+class _TicketPool:
+    """Pending tickets of one runtime, drained by its polling service."""
+
+    def __init__(self, runtime: TaskRuntime) -> None:
+        self._lock = threading.Lock()
+        self._tickets: List[_Ticket] = []
+        runtime.polling.register_polling_service(
+            "TAC ticket pool", self.poll, None)
+
+    def add(self, ticket: _Ticket) -> None:
+        with self._lock:
+            self._tickets.append(ticket)
+
+    def poll(self, _data: Any) -> bool:
+        with self._lock:
+            snapshot = list(self._tickets)
+        completed = [t for t in snapshot if t.handle.test()]
+        if completed:
+            with self._lock:
+                self._tickets = [t for t in self._tickets
+                                 if t not in completed]
+            for t in completed:
+                if t.waiter is not None:
+                    unblock_task(t.waiter)            # blocking mode
+                if t.counter is not None:
+                    decrease_task_event_counter(t.counter, t.n_events)
+        return False  # stay registered
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._tickets)
+
+
+def _pool(runtime: TaskRuntime) -> _TicketPool:
+    pool = getattr(runtime, "_tac_pool", None)
+    if pool is None:
+        with runtime._lock:
+            pool = getattr(runtime, "_tac_pool", None)
+            if pool is None:
+                pool = _TicketPool(runtime)
+                runtime._tac_pool = pool  # type: ignore[attr-defined]
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# The two interoperability modes
+# ---------------------------------------------------------------------------
+def wait(handle: AsyncHandle) -> Any:
+    """Task-aware blocking wait (§6.1, Fig. 3).
+
+    Inside a task with TASK_MULTIPLE enabled: test; if incomplete, register a
+    ticket and *pause the task* — the worker runs other ready tasks and the
+    polling service resumes us on completion.  Otherwise: plain blocking wait
+    (the PMPI path).
+    """
+    task = current_task()
+    if is_enabled() and task is not None:
+        if handle.test():
+            return handle.result
+        ctx = get_current_blocking_context()
+        _pool(task._runtime).add(_Ticket(handle, waiter=ctx))
+        block_current_task(ctx)
+        return handle.result
+    handle.wait()
+    return handle.result
+
+
+def waitall(handles: Sequence[AsyncHandle]) -> List[Any]:
+    """Blocking wait on several handles with a single pause/resume cycle."""
+    composite = CompositeHandle(handles)
+    wait(composite)
+    return [h.result for h in handles]
+
+
+def iwait(handle: AsyncHandle) -> None:
+    """TAMPI_Iwait (§6.2, Fig. 4): bind ``handle`` to the task's events.
+
+    Returns immediately.  The calling task's dependencies are released only
+    once the task finishes *and* the handle completes.  The buffers produced
+    by the operation must not be consumed inside this task after the call —
+    consumers declare dependencies instead (Fig. 5).
+    """
+    task = current_task()
+    if is_enabled() and task is not None:
+        if handle.test():
+            return
+        cnt = get_current_event_counter()
+        increase_current_task_event_counter(cnt, 1)
+        _pool(task._runtime).add(_Ticket(handle, counter=cnt))
+        return
+    handle.wait()
+
+
+def iwaitall(handles: Sequence[AsyncHandle]) -> None:
+    """TAMPI_Iwaitall (§6.2): bind several handles to the task's events."""
+    task = current_task()
+    if is_enabled() and task is not None:
+        pending = [h for h in handles if not h.test()]
+        if not pending:
+            return
+        cnt = get_current_event_counter()
+        increase_current_task_event_counter(cnt, len(pending))
+        pool = _pool(task._runtime)
+        for h in pending:
+            pool.add(_Ticket(h, counter=cnt))
+        return
+    for h in handles:
+        h.wait()

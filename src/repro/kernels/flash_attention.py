@@ -1,0 +1,139 @@
+"""Flash attention Pallas-TPU kernel (tiled online softmax).
+
+TPU-native adaptation of the attention hot spot: q/k/v tiles are staged
+HBM→VMEM via BlockSpecs, scores for one (block_q × block_k) tile live
+entirely in VMEM/VREGs, and the online-softmax running statistics (m, l) and
+the output accumulator are carried across the k-block grid dimension in VMEM
+scratch.  The MXU sees (block_q, d) × (d, block_k) and
+(block_q, block_k) × (block_k, d) matmuls, with d and the block sizes kept
+at multiples of 128 where the head dim allows.
+
+Supports GQA (kv-head broadcast through the index map), causal masking and
+sliding windows.  Fully-masked tiles are skipped with ``pl.when`` so the
+causal kernel does ~half the MXU work of the dense one.
+
+Validated in ``interpret=True`` mode against ``ref.attention`` over a shape
+and dtype sweep (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 block_q: int, block_k: int, n_kblocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Tile-level skip: with causal masking, tiles strictly above the
+    # diagonal contribute nothing; with a sliding window, tiles entirely
+    # left of the window contribute nothing either.
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k - 1
+                              > q_start - window)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                         # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                   # (bq,)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Guard fully-masked rows (keep exp(NEG_INF - NEG_INF) at 0).
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kblocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Tiled attention.  q: (B, S, H, D); k/v: (B, T, Hkv, D)."""
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    rep = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    n_kblocks = T // block_k
+    grid = (B, H, S // block_q, n_kblocks)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=1.0 / (D ** 0.5), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kblocks=n_kblocks)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, iq, ik, rep=rep: (b, ik, h // rep, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, iq, ik, rep=rep: (b, ik, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            # fp32 accumulator + online-softmax stats in VMEM, persistent
+            # across the (innermost, sequential) k-block grid dimension.
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

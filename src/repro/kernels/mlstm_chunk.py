@@ -1,0 +1,135 @@
+"""Chunkwise mLSTM (xLSTM matrix-memory) Pallas-TPU kernel.
+
+Same TPU shape as the SSD kernel: the chunk-quadratic gate/score matrices
+live in VMEM, the (d×d) matrix memory C plus normalizer n and stabilizer m
+are carried across the innermost (sequential) grid dimension in VMEM
+scratch, and each chunk contributes three MXU matmuls (q·kᵀ, scores·v,
+kᵀ·v).  Numerics follow the stabilised xLSTM recurrence exactly
+(log-space forget-gate accumulation, running max stabiliser, |n·q| floor).
+
+Validated in interpret mode against ``ref.mlstm_sequential``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, ig_ref, fg_ref,
+            y_ref, cf_ref, nf_ref, mf_ref,
+            C_ref, n_ref, m_ref, *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)           # (l, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    ig = ig_ref[0, :, 0].astype(jnp.float32)            # (l,)
+    lf = jax.nn.log_sigmoid(fg_ref[0, :, 0].astype(jnp.float32))
+
+    C = C_ref[...]                                       # (d, d)
+    n = n_ref[...]                                       # (1, d)
+    m = m_ref[0, 0]                                      # scalar
+
+    lf_cum = jnp.cumsum(lf)                              # (l,)
+    seg = lf_cum[:, None] - lf_cum[None, :]              # sum_{j<k<=i} lf
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    a_loc = jnp.where(row >= col, seg + ig[None, :], NEG)
+    m_local = jnp.max(a_loc, axis=-1)                    # (l,)
+    m_in = lf_cum + m                                    # (l,)
+    m_new = jnp.maximum(m_local, m_in)
+
+    w = jnp.exp(a_loc - m_new[:, None])                  # (l, l)
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    scores = qk * w
+    num = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    den = jnp.sum(scores, axis=-1)                       # (l,)
+
+    scale_in = jnp.exp(m_in - m_new)                     # (l,)
+    num += jax.lax.dot_general(q, C, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32) \
+        * scale_in[:, None]
+    den += jnp.sum(q * n, axis=-1) * scale_in
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    y_ref[0, :, 0, :] = (num / den[:, None]).astype(y_ref.dtype)
+
+    # carry to end of chunk
+    total = lf_cum[-1]
+    m_end = m_new[-1]
+    w_end = jnp.exp(ig + total - lf_cum - m_end)         # (l,)
+    decay = jnp.exp(total + m - m_end)
+    C_ref[...] = C * decay + jax.lax.dot_general(
+        k * w_end[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = n * decay + jnp.sum(k * w_end[:, None], axis=0)[None]
+    m_ref[0, 0] = m_end
+
+    @pl.when(ic == n_chunks - 1)
+    def _fin():
+        cf_ref[0, 0] = C_ref[...]
+        nf_ref[0, 0] = n_ref[0]
+        mf_ref[0, 0] = m_ref[0, 0]
+
+
+def mlstm_chunk(q: jax.Array, k: jax.Array, v: jax.Array,
+                i_gate: jax.Array, f_gate: jax.Array, *, chunk: int = 128,
+                interpret: bool = False
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array,
+                                            jax.Array]]:
+    """q,k,v: (b,s,h,d); i_gate,f_gate: (b,s,h) pre-activation logits.
+
+    Returns (y, (C, n, m)) with C: (b,h,d,d), n: (b,h,d), m: (b,h) fp32.
+    """
+    b, s, h, d = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    grid = (b, h, nc)
+
+    y, Cf, nf, mf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, d), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1, d), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1, d), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, d), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda ib, ih, ic: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda ib, ih, ic: (ib, ih, 0)),
+            pl.BlockSpec((1, 1), lambda ib, ih, ic: (ib, ih)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((d, d), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, i_gate, f_gate)
+    return y, (Cf, nf, mf)

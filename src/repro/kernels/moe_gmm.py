@@ -1,0 +1,76 @@
+"""Expert grouped-matmul Pallas-TPU kernel (MoE expert compute).
+
+The expert FFN matmuls are the FLOPs hot spot of the MoE architectures
+(olmoe, mixtral).  After capacity-based dispatch, the activations are laid
+out as (E, C, K) — a fixed capacity of C token slots per expert — and each
+expert applies its own (K, N) weight.  This kernel runs the batched expert
+matmul as a blocked MXU pipeline: grid (E, C/bc, N/bn, K/bk) with an fp32
+VMEM accumulator carried over the innermost (sequential) K dimension, so
+each weight tile is streamed HBM→VMEM exactly once per (expert, row-block,
+col-block).
+
+The dynamic-group-size variant (megablocks-style, rows sorted by expert with
+ragged boundaries) is handled by the ops wrapper by padding group sizes to
+the capacity grid — on TPU the fixed-capacity layout is what keeps the MXU
+dense, which is the hardware-adaptation story for this kernel (GPU
+megablocks relies on CSR-style tile indirection instead).
+
+Validated against ``ref.gmm`` with ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_kblocks: int):
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (bc, bk)
+    w = w_ref[0].astype(jnp.float32)          # (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kk == n_kblocks - 1)
+    def _fin():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm(x: jax.Array, w: jax.Array, *, block_c: int = 128,
+            block_n: int = 128, block_k: int = 128,
+            interpret: bool = False) -> jax.Array:
+    """Batched expert matmul.  x: (E, C, K); w: (E, K, N) -> (E, C, N)."""
+    E, C, K = x.shape
+    N = w.shape[-1]
+    block_c = min(block_c, C)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert C % block_c == 0 and N % block_n == 0 and K % block_k == 0
+    nk = K // block_k
+    grid = (E, C // block_c, N // block_n, nk)
+
+    kernel = functools.partial(_gmm_kernel, n_kblocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_k),
+                         lambda e, ic, jn, kk: (e, ic, kk)),
+            pl.BlockSpec((1, block_k, block_n),
+                         lambda e, ic, jn, kk: (e, kk, jn)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_n),
+                               lambda e, ic, jn, kk: (e, ic, jn)),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

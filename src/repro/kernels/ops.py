@@ -1,0 +1,122 @@
+"""Public kernel entry points with platform dispatch.
+
+Models call these wrappers; each dispatches to the Pallas-TPU kernel on TPU
+backends and to the pure-jnp oracle elsewhere (CPU dry-run / tests), unless
+forced with ``impl=``:
+
+* ``impl="pallas"``            — the TPU kernel (compiled)
+* ``impl="pallas_interpret"``  — the TPU kernel body, interpreted (CPU)
+* ``impl="ref"``               — the jnp oracle
+* ``impl=None``                — auto: pallas on TPU else ref
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .mamba2_ssd import mamba2_ssd as _ssd_pallas
+from .moe_gmm import moe_gmm as _gmm_pallas
+from .mlstm_chunk import mlstm_chunk as _mlstm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: Optional[str]) -> str:
+    if impl is None:
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    impl: Optional[str] = None, constrain=None) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        # Flash-style chunked jnp (O(S·chunk) memory) — dense ref.attention
+        # stays the oracle for small-shape kernel tests.  Long causal
+        # self-attention uses the one-level causal split (-25% flops).
+        S, T = q.shape[1], k.shape[1]
+        if causal and window is None and S == T and S >= 4096 \
+                and S % 2 == 0:
+            return ref.attention_causal_split(q, k, v, constrain=constrain)
+        return ref.attention_chunked(q, k, v, causal=causal, window=window,
+                                     constrain=constrain)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         block_q=block_q, block_k=block_k,
+                         interpret=(impl == "pallas_interpret"))
+
+
+def mamba2_ssd(x, dt, A, B, C, *, chunk: int = 128, init_state=None,
+               impl: Optional[str] = None) -> Tuple[jax.Array, jax.Array]:
+    s = x.shape[1]
+    chunk = min(chunk, s) if s % chunk != 0 else chunk
+    pad = (-s) % chunk
+    if pad:
+        # dt = 0 on padded steps: decay exp(0·A) = 1 and zero input, so the
+        # final state is untouched; padded outputs are sliced off.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    impl = _resolve(impl)
+    if impl == "ref":
+        y, st = ref.ssd_chunked(x, dt, A, B, C, chunk=chunk,
+                                init_state=init_state)
+    else:
+        y, st = _ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                            init_state=init_state,
+                            interpret=(impl == "pallas_interpret"))
+    return (y[:, :s] if pad else y), st
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, *, chunk: int, init=None,
+                  impl: Optional[str] = None):
+    s = q.shape[1]
+    chunk = min(chunk, s) if s % chunk != 0 else chunk
+    pad = (-s) % chunk
+    if pad:
+        # i = -inf on padded steps (no insertion), f logits >> 0 (log-sigmoid
+        # ≈ 0 ⇒ no decay): the carry state passes through unchanged.
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=-1e30)
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=30.0)
+    impl = _resolve(impl)
+    if impl != "ref" and init is None:
+        # Pallas kernel path (zero initial state only — prefill/train);
+        # decode chaining goes through the jnp chunked implementation.
+        y, st = _mlstm_pallas(q, k, v, i_gate, f_gate, chunk=chunk,
+                              interpret=(impl == "pallas_interpret"))
+    else:
+        y, st = ref.mlstm_chunked(q, k, v, i_gate, f_gate, chunk=chunk,
+                                  init=init)
+    return (y[:, :s] if pad else y), st
+
+
+def moe_gmm(x, w, *, impl: Optional[str] = None, **blocks) -> jax.Array:
+    """Batched expert matmul: x (E, C, K) × w (E, K, N) -> (E, C, N)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        E, C, K = x.shape
+        sizes = jnp.full((E,), C, jnp.int32)
+        return ref.gmm(x.reshape(E * C, K), w, sizes).reshape(
+            E, C, w.shape[-1])
+    return _gmm_pallas(x, w, interpret=(impl == "pallas_interpret"),
+                       **blocks)
+
+
+# Pure-jnp layers with no Pallas variant (documented in DESIGN.md):
+mlstm_sequential = ref.mlstm_sequential
+mlstm_decode_step = ref.mlstm_decode_step
+ssd_decode_step = ref.ssd_decode_step
+attention_ref = ref.attention

@@ -1,0 +1,13 @@
+from . import config, layers, model
+from .config import (ModelConfig, ShapeConfig, ALL_SHAPES, TRAIN_4K,
+                     PREFILL_32K, DECODE_32K, LONG_500K, applicable_shapes,
+                     shape_by_name)
+from .model import init, apply, init_cache, lm_loss, param_count, \
+    active_param_count
+
+__all__ = [
+    "config", "layers", "model", "ModelConfig", "ShapeConfig", "ALL_SHAPES",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "applicable_shapes", "shape_by_name", "init", "apply", "init_cache",
+    "lm_loss", "param_count", "active_param_count",
+]

@@ -1,0 +1,52 @@
+"""Model input construction: abstract specs (dry-run) and concrete batches.
+
+Per the assignment, ``[audio]``/``[vlm]`` modality frontends are stubs —
+``input_specs()`` provides precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ShapeConfig
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    dt = cfg.activation_dtype
+    if cfg.frontend == "audio":
+        batch: Dict[str, Any] = {"embeds": sd((B, S, cfg.d_model), dt)}
+    else:
+        batch = {"tokens": sd((B, S), jnp.int32)}
+        if cfg.frontend == "vlm" and shape.kind != "decode":
+            batch["patch_embeds"] = sd((B, cfg.n_patches, cfg.d_model), dt)
+    if shape.kind == "train":
+        batch["labels"] = sd((B, S), jnp.int32)
+    return batch
+
+
+def make_batch(cfg: ModelConfig, *, batch: int, seq: int, kind: str = "train",
+               key: Optional[jax.Array] = None) -> Dict[str, Any]:
+    """Concrete random batch (smoke tests / examples / training driver)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    dt = cfg.activation_dtype
+    if cfg.frontend == "audio":
+        out: Dict[str, Any] = {
+            "embeds": jax.random.normal(ks[0], (batch, seq, cfg.d_model), dt)}
+    else:
+        out = {"tokens": jax.random.randint(ks[0], (batch, seq), 0,
+                                            cfg.vocab, jnp.int32)}
+        if cfg.frontend == "vlm" and kind != "decode":
+            out["patch_embeds"] = jax.random.normal(
+                ks[1], (batch, cfg.n_patches, cfg.d_model), dt)
+    if kind == "train":
+        out["labels"] = jax.random.randint(ks[2], (batch, seq), 0,
+                                           cfg.vocab, jnp.int32)
+    return out

@@ -1,0 +1,100 @@
+"""Optimizer substrate: AdamW with fp32 master weights, clipping, schedules.
+
+Implemented from scratch in JAX (no optax dependency).  The optimizer state
+is sharded like the parameters (FSDP — the sharding rules apply to ``m``,
+``v`` and ``master`` because they mirror the param tree structure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # ()
+    m: Any                   # fp32, like params
+    v: Any                   # fp32, like params
+    master: Any              # fp32 master copy of params
+
+
+def lr_at(cfg: OptimConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+        * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init(params) -> OptState:
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    master = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=f32(params),
+                    v=f32(params), master=master)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(cfg: OptimConfig, grads, state: OptState, params
+           ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.clip_norm else jnp.float32(1.0)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * master
+        master = master - lr * delta
+        return m, v, master, master.astype(p.dtype)
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    gs = treedef.flatten_up_to(grads)
+    ms = treedef.flatten_up_to(state.m)
+    vs = treedef.flatten_up_to(state.v)
+    mas = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, v, ma, p) for g, m, v, ma, p in
+           zip(gs, ms, vs, mas, flat)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+    new_params = treedef.unflatten([o[3] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, OptState(step, new_m, new_v, new_master), metrics

@@ -1,0 +1,183 @@
+"""Tests for the pause/resume and external-events APIs (paper §4)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (TaskRuntime, get_current_blocking_context,
+                        block_current_task, unblock_task,
+                        get_current_event_counter,
+                        increase_current_task_event_counter,
+                        decrease_task_event_counter)
+
+
+@pytest.mark.parametrize("mode", ["spare-thread", "nested"])
+def test_pause_resume_roundtrip(mode):
+    """Fig. 1: a task pauses; another thread unblocks it; it resumes."""
+    ctx_box = {}
+    resumed = []
+
+    def blocker():
+        ctx = get_current_blocking_context()
+        ctx_box["ctx"] = ctx
+        block_current_task(ctx)
+        resumed.append(True)
+
+    with TaskRuntime(num_workers=2, block_mode=mode) as rt:
+        rt.submit(blocker)
+        for _ in range(200):
+            if "ctx" in ctx_box:
+                break
+            time.sleep(0.01)
+        assert "ctx" in ctx_box
+        unblock_task(ctx_box["ctx"])
+        rt.taskwait()
+    assert resumed == [True]
+
+
+def test_paused_task_frees_the_core():
+    """While one task is paused, the worker must run other ready tasks —
+    with a single designated worker (spare-thread mode spawns the spare)."""
+    ctx_box = {}
+    progressed = threading.Event()
+
+    def blocker():
+        ctx = get_current_blocking_context()
+        ctx_box["ctx"] = ctx
+        block_current_task(ctx)
+
+    def other():
+        progressed.set()
+
+    with TaskRuntime(num_workers=1) as rt:
+        rt.submit(blocker)
+        rt.submit(other)
+        assert progressed.wait(timeout=5.0), \
+            "core was not handed to the other task while paused"
+        while "ctx" not in ctx_box:
+            time.sleep(0.005)
+        unblock_task(ctx_box["ctx"])
+        rt.taskwait()
+    assert rt.stats["task_blocks"] == 1
+    assert rt.stats["task_resumes"] == 1
+
+
+def test_blocking_context_single_use():
+    errors = []
+
+    def body():
+        ctx = get_current_blocking_context()
+        ctx2 = get_current_blocking_context()  # invalidates ctx
+        try:
+            block_current_task(ctx)
+        except RuntimeError as e:
+            errors.append(str(e))
+        unblock_task(ctx2)        # pre-set: block returns immediately
+        block_current_task(ctx2)
+
+    with TaskRuntime(num_workers=2) as rt:
+        rt.submit(body)
+        rt.taskwait()
+    assert errors and "stale" in errors[0]
+
+
+def test_external_events_defer_release():
+    """§4.3/Fig. 2: the task finishes but its successors only become ready
+    once the bound external event is fulfilled."""
+    counter_box = {}
+    order = []
+
+    def producer():
+        cnt = get_current_event_counter()
+        increase_current_task_event_counter(cnt, 1)
+        counter_box["cnt"] = cnt
+        order.append("producer-finished")
+
+    def consumer():
+        order.append("consumer")
+
+    with TaskRuntime(num_workers=4) as rt:
+        rt.submit(producer, out=["buf"])
+        rt.submit(consumer, in_=["buf"])
+        # Give the runtime ample opportunity to (incorrectly) run consumer.
+        deadline = time.time() + 0.3
+        while time.time() < deadline:
+            time.sleep(0.01)
+        assert order == ["producer-finished"], \
+            "dependencies released before the external event was fulfilled"
+        decrease_task_event_counter(counter_box["cnt"], 1)
+        rt.taskwait()
+    assert order == ["producer-finished", "consumer"]
+
+
+def test_events_completing_before_task_finish():
+    """§4.3: if all events complete before the task finishes, dependencies
+    are released as soon as the task finishes its execution."""
+    order = []
+    release_gate = threading.Event()
+
+    def producer():
+        cnt = get_current_event_counter()
+        increase_current_task_event_counter(cnt, 2)
+        decrease_task_event_counter(cnt, 2)  # both events fulfilled early
+        release_gate.wait(timeout=5.0)
+        order.append("producer")
+
+    with TaskRuntime(num_workers=2) as rt:
+        rt.submit(producer, out=["d"])
+        rt.submit(lambda: order.append("consumer"), in_=["d"])
+        release_gate.set()
+        rt.taskwait()
+    assert order == ["producer", "consumer"]
+
+
+def test_only_owner_can_increase():
+    box = {}
+
+    def body():
+        box["cnt"] = get_current_event_counter()
+
+    with TaskRuntime(num_workers=1) as rt:
+        rt.submit(body)
+        rt.taskwait()
+        with pytest.raises(RuntimeError):
+            increase_current_task_event_counter(box["cnt"], 1)
+
+
+def test_event_counter_underflow_guard():
+    box = {}
+
+    def body():
+        cnt = get_current_event_counter()
+        increase_current_task_event_counter(cnt, 1)
+        box["cnt"] = cnt
+
+    with TaskRuntime(num_workers=1) as rt:
+        rt.submit(body)
+        while "cnt" not in box:
+            time.sleep(0.005)
+        decrease_task_event_counter(box["cnt"], 1)
+        rt.taskwait()
+    with pytest.raises(RuntimeError):
+        decrease_task_event_counter(box["cnt"], 1)
+
+
+def test_polling_service_periodic_and_unregister():
+    from repro.core import PollingRegistry
+    reg = PollingRegistry(interval=0.001)
+    calls = []
+    reg.register_polling_service("svc", lambda d: calls.append(d) or False, 7)
+    reg.start()
+    time.sleep(0.05)
+    reg.stop()
+    assert len(calls) >= 5 and calls[0] == 7
+    n = len(calls)
+    reg.unregister_polling_service("svc", None, None)  # no match: stays
+    assert reg.num_services == 1
+
+    # auto-unregister on truthy return
+    reg2 = PollingRegistry(interval=0.001)
+    reg2.register_polling_service("once", lambda d: True, None)
+    reg2.poll_once()
+    assert reg2.num_services == 0

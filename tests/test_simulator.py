@@ -1,0 +1,80 @@
+"""Tests for the deterministic makespan simulator (core/simulate.py)."""
+
+import pytest
+
+from repro.core.simulate import (Simulator, SimTask, COMPUTE, COMM_HELD,
+                                 COMM_PAUSED, COMM_EVENTS)
+
+
+def test_serial_chain():
+    tasks = [SimTask(0, 0, 1.0), SimTask(1, 0, 2.0, start_deps=[(0, 0.0)])]
+    res = Simulator(1, 1).run(tasks)
+    assert res.makespan == pytest.approx(3.0)
+
+
+def test_parallel_width_limited_by_workers():
+    tasks = [SimTask(i, 0, 1.0) for i in range(4)]
+    assert Simulator(1, 2).run(tasks).makespan == pytest.approx(2.0)
+    assert Simulator(1, 4).run(tasks).makespan == pytest.approx(1.0)
+
+
+def test_edge_latency():
+    tasks = [SimTask(0, 0, 1.0), SimTask(1, 1, 1.0, start_deps=[(0, 0.5)])]
+    res = Simulator(2, 1).run(tasks)
+    assert res.makespan == pytest.approx(2.5)
+
+
+def test_comm_held_holds_the_worker():
+    """A held communication task starves the second task on a 1-worker rank,
+    while the paused variant lets it run during the wait."""
+    def graph(kind):
+        return [
+            SimTask(0, 1, 5.0, name="remote-producer"),
+            SimTask(1, 0, 0.1, kind=kind, event_deps=[(0, 0.0)], name="comm"),
+            SimTask(2, 0, 1.0, name="independent-compute"),
+        ]
+
+    held = Simulator(2, 1).run(graph(COMM_HELD))
+    paused = Simulator(2, 1, resume_overhead=0.01).run(graph(COMM_PAUSED))
+    events = Simulator(2, 1).run(graph(COMM_EVENTS))
+    # held: comm occupies the only worker until t=5 → compute ends at 6.
+    assert held.makespan == pytest.approx(6.0)
+    assert held.held_wait_time[0] == pytest.approx(4.9)
+    # paused: compute runs during the wait; comm resumes at 5 + overhead.
+    assert paused.makespan == pytest.approx(5.01)
+    assert paused.resumes == 1 and paused.max_paused == 1
+    # events: no resume round-trip at all.
+    assert events.makespan == pytest.approx(5.0)
+    assert events.resumes == 0 and events.max_paused == 0
+
+
+def test_deadlock_detection_section5():
+    """§5: two held comm tasks on one worker that match each other."""
+    tasks = [
+        SimTask(0, 0, 0.1, kind=COMM_HELD, event_deps=[(1, 0.0)]),
+        SimTask(1, 0, 0.1, kind=COMM_HELD, event_deps=[(0, 0.0)]),
+    ]
+    with pytest.raises(RuntimeError, match="deadlock"):
+        Simulator(1, 1).run(tasks)
+    # The same graph with the pause/resume discipline completes (§5).
+    for t in tasks:
+        t.kind = COMM_PAUSED
+    res = Simulator(1, 1, resume_overhead=0.0).run(tasks)
+    assert res.makespan == pytest.approx(0.2)
+
+
+def test_events_mode_releases_downstream_at_arrival():
+    tasks = [
+        SimTask(0, 1, 3.0),                                    # remote
+        SimTask(1, 0, 0.1, kind=COMM_EVENTS, event_deps=[(0, 0.5)]),
+        SimTask(2, 0, 1.0, start_deps=[(1, 0.0)]),             # consumer
+    ]
+    res = Simulator(2, 1).run(tasks)
+    # consumer starts at event arrival 3.5, ends 4.5
+    assert res.makespan == pytest.approx(4.5)
+
+
+def test_utilization_accounting():
+    tasks = [SimTask(i, 0, 1.0) for i in range(4)]
+    res = Simulator(1, 2).run(tasks)
+    assert res.utilization(2, 1) == pytest.approx(1.0)

@@ -1,0 +1,101 @@
+"""Unit tests for the task graph / dependency semantics (paper §2.1, §4.6)."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import TaskRuntime, TaskError
+
+
+def test_in_out_dependency_order():
+    order = []
+    lock = threading.Lock()
+
+    def log(tag):
+        with lock:
+            order.append(tag)
+
+    with TaskRuntime(num_workers=4) as rt:
+        rt.submit(log, "w1", out=["a"])
+        rt.submit(log, "r1", in_=["a"])
+        rt.submit(log, "r2", in_=["a"])
+        rt.submit(log, "w2", out=["a"])
+        rt.taskwait()
+        assert order.index("w1") < order.index("r1")
+        assert order.index("w1") < order.index("r2")
+        assert order.index("r1") < order.index("w2")
+        assert order.index("r2") < order.index("w2")
+
+
+def test_independent_tasks_run_concurrently():
+    barrier = threading.Barrier(3, timeout=5.0)
+
+    def rendezvous():
+        barrier.wait()
+
+    with TaskRuntime(num_workers=4) as rt:
+        for _ in range(3):
+            rt.submit(rendezvous)
+        rt.taskwait()  # would raise BrokenBarrierError via TaskError if serial
+
+
+def test_inout_chain_serializes():
+    values = []
+
+    def bump():
+        values.append(len(values))
+
+    with TaskRuntime(num_workers=8) as rt:
+        for _ in range(50):
+            rt.submit(bump, inout=["counter"])
+        rt.taskwait()
+    assert values == list(range(50))
+
+
+def test_results_and_errors():
+    with TaskRuntime(num_workers=2) as rt:
+        t = rt.submit(lambda a, b: a + b, 2, 3)
+        rt.taskwait()
+        assert t.result == 5
+
+    rt = TaskRuntime(num_workers=2)
+    rt.start()
+    rt.submit(lambda: 1 / 0, name="boom")
+    with pytest.raises(TaskError):
+        rt.taskwait()
+    rt.close()
+
+
+def test_error_does_not_hang_dependents():
+    ran = []
+    rt = TaskRuntime(num_workers=2)
+    rt.start()
+    rt.submit(lambda: 1 / 0, out=["x"], name="boom")
+    rt.submit(lambda: ran.append(1), in_=["x"])
+    with pytest.raises(TaskError):
+        rt.taskwait()
+    rt.close()
+    assert ran == [1]  # dependency released despite the failure
+
+
+def test_critical_path():
+    rt = TaskRuntime(num_workers=1)
+    rt.start()
+    rt.submit(lambda: None, out=["a"], cost=2.0)
+    rt.submit(lambda: None, in_=["a"], out=["b"], cost=3.0)
+    rt.submit(lambda: None, cost=10.0)  # independent
+    rt.taskwait()
+    assert rt.graph.critical_path() == 10.0
+    rt.close()
+
+
+def test_identity_keyed_regions():
+    a, b = object(), object()
+    order = []
+    with TaskRuntime(num_workers=4) as rt:
+        rt.submit(lambda: order.append("wa"), out=[a])
+        rt.submit(lambda: order.append("wb"), out=[b])
+        rt.submit(lambda: order.append("ra"), in_=[a])
+        rt.taskwait()
+    assert order.index("wa") < order.index("ra")

@@ -23,6 +23,13 @@ Measurements: (a) REAL execution on the host task runtime at small scale
 (all versions must agree numerically); (b) deterministic makespans of the
 same task DAGs under the paper's machine model (core/simulate.py) — the
 scaling curves.  CSV schema: name,us_per_call,derived
+
+Each iteration additionally computes the global residual through the
+task-aware collectives API (core/collectives.py): a scalar ``allreduce``
+per iteration, executed per version as a sequential group call (pure /
+fork-join), a serialized group inside the sentinel chain, a task-aware
+blocking allreduce (interop-blk), or an event-bound allreduce
+(interop-nonblk).  The simulator models it as a collective node group.
 """
 
 from __future__ import annotations
@@ -32,7 +39,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import TaskRuntime, tac
+from repro.core import Collectives, TaskRuntime, tac
+from repro.core.collectives import n_rounds
 from repro.core.simulate import (Simulator, SimTask, COMPUTE, COMM_HELD,
                                  COMM_PAUSED, COMM_EVENTS)
 
@@ -72,6 +80,8 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
     halos: Dict = {}
     zeros = np.zeros(bs)
     world = tac.CommWorld(n_ranks)
+    coll = Collectives(world)
+    residuals: Dict = {}   # (rank, it) -> float | CollectiveHandle
     tac.init(tac.TASK_MULTIPLE if version.startswith("interop")
              else tac.THREAD_MULTIPLE)
     rt = TaskRuntime(num_workers=workers)
@@ -113,15 +123,6 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
                     out.append(("up", r + 1, r, (r + 1) * nby,
                                 r * nby + nby - 1, bx, it))  # top@it-1
         return out
-
-    def make_send(kind, src, gy_src, bx, it):
-        def send():
-            src_it = it if kind == "dn" else it - 1
-            world.isend(grids[src_it][gy_src][bx][-1 if kind == "dn" else 0]
-                        .copy(), src=src, dst=None or (src + 1 if kind ==
-                                                       "dn" else src - 1),
-                        tag=(kind, bx, it))
-        return send
 
     def make_recv(kind, src, dst, gy_dst, bx, it):
         hkey = ("top", gy_dst, bx, it) if kind == "dn" else \
@@ -216,8 +217,69 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
                         kind, src, dst, gy_src, gy_dst, bx2, _ = p
                         submit_pair(kind, src, dst, gy_src, gy_dst, bx2)
 
+        # -- global residual: one allreduce per iteration (collectives) --
+        def local_residual(r2, it2):
+            tot = 0.0
+            for gy2 in range(r2 * nby, (r2 + 1) * nby):
+                for bx2 in range(nbx):
+                    tot += float(np.abs(grids[it2][gy2][bx2]
+                                        - grids[it2 - 1][gy2][bx2]).sum())
+            return np.float64(tot)
+
+        if version in ("pure", "forkjoin"):
+            if version == "forkjoin":
+                rt.taskwait()       # fork-join: iteration fully done
+            vals = coll.run_group(
+                "allreduce",
+                [{"value": local_residual(r2, it)}
+                 for r2 in range(n_ranks)],
+                op="sum", algorithm="doubling", key=("res", it))
+            for r2 in range(n_ranks):
+                residuals[(r2, it)] = float(vals[r2])
+        elif version == "sentinel":
+            # Without TASK_MULTIPLE the collective must be serialised into
+            # the comm chain — one task drives the whole group.
+            def res_group(it2=it):
+                vals = coll.run_group(
+                    "allreduce",
+                    [{"value": local_residual(r2, it2)}
+                     for r2 in range(n_ranks)],
+                    op="sum", algorithm="doubling", key=("res", it2))
+                for r2 in range(n_ranks):
+                    residuals[(r2, it2)] = float(vals[r2])
+            rt.submit(res_group,
+                      in_=[("blk", gy2, bx2, it) for gy2 in range(NY)
+                           for bx2 in range(nbx)],
+                      inout=[("comm-sentinel",)], label="comm",
+                      name=f"res@{it}")
+        else:
+            for r2 in range(n_ranks):
+                def res_task(r2=r2, it2=it):
+                    v = local_residual(r2, it2)
+                    if version == "interop-nonblk":
+                        residuals[(r2, it2)] = coll.allreduce(
+                            v, rank=r2, op="sum", algorithm="doubling",
+                            mode="event", key=("res", it2))
+                    else:
+                        residuals[(r2, it2)] = float(coll.allreduce(
+                            v, rank=r2, op="sum", algorithm="doubling",
+                            mode="blocking", key=("res", it2)))
+                rt.submit(res_task,
+                          in_=[("blk", gy2, bx2, it)
+                               for gy2 in range(r2 * nby, (r2 + 1) * nby)
+                               for bx2 in range(nbx)],
+                          label="comm", name=f"res[{r2}]@{it}")
+
     rt.taskwait()
     stats = dict(rt.stats)
+    # Resolve event-bound handles and check every rank saw the same value.
+    res_by_it: Dict[int, float] = {}
+    for (r2, it2), v in sorted(residuals.items()):
+        if isinstance(v, tac.AsyncHandle):
+            v = float(v.result)
+        prev = res_by_it.setdefault(it2, v)
+        assert abs(prev - v) < 1e-9, ("residual disagreement", it2, prev, v)
+    stats["residuals"] = res_by_it
     rt.close()
     return np.block(grids[iters]), stats
 
@@ -230,12 +292,14 @@ def build_sim_graph(version, *, n_ranks, nby, nbx, iters,
     tasks: List[SimTask] = []
     index: Dict[str, int] = {}
 
-    def add(rank, compute, kind=COMPUTE, start=(), events=(), name=""):
+    def add(rank, compute, kind=COMPUTE, start=(), events=(), name="",
+            group=None, group_latency=0.0):
         t = SimTask(len(tasks), rank, compute, kind=kind,
                     start_deps=[(index[s], 0.0) for s in start
                                 if s and s in index],
                     event_deps=[(index[e], latency) for e in events
-                                if e and e in index], name=name)
+                                if e and e in index], name=name,
+                    group=group, group_latency=group_latency)
         tasks.append(t)
         index[name] = t.id
 
@@ -316,6 +380,23 @@ def build_sim_graph(version, *, n_ranks, nby, nbx, iters,
                     name=f"b[{r2}]@{it}")
             add(0, 0.0, start=[f"b[{r2}]@{it}" for r2 in range(n_ranks)],
                 name=f"barrier@{it}")
+
+        # residual allreduce: one collective node per rank per iteration
+        res_kind = {"interop-blk": COMM_PAUSED,
+                    "interop-nonblk": COMM_EVENTS}.get(version, COMM_HELD)
+        res_lat = n_rounds("allreduce", "doubling", n_ranks) * latency
+        for r in range(n_ranks):
+            deps = [f"c[{r * nby + ly},{bx}]@{it}"
+                    for ly in range(nby) for bx in range(nbx)]
+            if version == "forkjoin":
+                deps.append(f"barrier@{it}")
+            if version == "sentinel":
+                deps.append(last_comm[r] or "")
+            add(r, t_comm, kind=res_kind, start=deps,
+                group=f"res@{it}", group_latency=res_lat,
+                name=f"res[{r}]@{it}")
+            if version == "sentinel":
+                last_comm[r] = f"res[{r}]@{it}"
     return tasks
 
 
@@ -333,11 +414,13 @@ def simulate_version(version, *, n_ranks, workers=48, nby=4, nbx=16,
 # ---------------------------------------------------------------------------
 def bench(print_fn=print):
     rows = []
-    ref, _ = run_real("pure")
+    ref, ref_stats = run_real("pure")
     for v in VERSIONS[1:]:
-        out, _ = run_real(v)
+        out, st = run_real(v)
         err = float(np.abs(out - ref).max())
         assert err < 1e-10, (v, err)
+        for it, val in ref_stats["residuals"].items():
+            assert abs(st["residuals"][it] - val) < 1e-9, (v, it)
 
     for v in VERSIONS:
         t0 = time.monotonic()

@@ -9,12 +9,19 @@ Versions (as in the paper — Fork-Join/Sentinel are equivalent to Pure here
 because there is one rank per core):
 
 * ``pure``           — sequential phases with a full exchange between them.
-* ``interop-blk``    — per-field communication tasks using task-aware
-                       blocking waits (TAMPI blocking mode): transposition
-                       overlaps physics/FFTs of other fields.
-* ``interop-nonblk`` — receives bound to event counters (TAMPI_Iwait):
-                       same overlap, no pause/resume cost — the paper's
+* ``interop-blk``    — the transposition is a per-rank ``alltoall`` from
+                       the task-aware collectives API in *blocking* mode
+                       (pause/resume per round): the exchange overlaps
+                       physics/FFTs of other ranks' tasks.
+* ``interop-nonblk`` — the same ``alltoall`` in *event-bound* mode: the
+                       exchange task finishes immediately, its dependency
+                       release waits on the collective — the paper's
                        preferred mode for many small messages.
+
+The data transposition (grid space ↔ spectral space) is exactly MPI's
+all-to-all, so this benchmark is the collectives subsystem's end-to-end
+exercise (core/collectives.py); the ``pure`` version drives the same
+schedule sequentially through ``Collectives.run_group``.
 
 Real executions validate numerics across versions; the simulator replays
 the task DAGs for the scaling curve.  CSV: name,us_per_call,derived
@@ -27,7 +34,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import TaskRuntime, tac
+from repro.core import Collectives, TaskRuntime, tac
+from repro.core.collectives import n_rounds
 from repro.core.simulate import Simulator, SimTask, COMPUTE, COMM_PAUSED, \
     COMM_EVENTS, COMM_HELD
 
@@ -56,6 +64,8 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
                   for f in range(n_fields) for r in range(n_ranks)}
     spec: Dict = {}
     world = tac.CommWorld(n_ranks)
+    coll = Collectives(world)
+    exch: Dict = {}   # alltoall results (or event-bound handles)
     tac.init(tac.TASK_MULTIPLE if version.startswith("interop")
              else tac.THREAD_MULTIPLE)
     rt = TaskRuntime(num_workers=workers)
@@ -64,91 +74,97 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
     def owner(f: int) -> int:
         return f % n_ranks
 
+    fields_of = {o: [f for f in range(n_fields) if owner(f) == o]
+                 for o in range(n_ranks)}
+    a2a_mode = "event" if version == "interop-nonblk" else "blocking"
+
     def phys_task(f, r, it):
         grid[(f, r)] = physics(grid[(f, r)])
 
-    def send_slice(f, r, it):
-        world.isend(grid[(f, r)].copy(), src=r, dst=owner(f),
-                    tag=("g2s", f, r, it))
+    def pack_g2s(r):
+        """Block for owner o = my point-slices of o's fields, field order."""
+        return [np.concatenate([grid[(f, r)] for f in fields_of[o]])
+                for o in range(n_ranks)]
 
-    def gather_fft(f, it):
+    def pack_s2g(o):
+        """Block for rank r = r's point-slices of my fields, field order."""
+        return [np.concatenate([spec[f][r * pts:(r + 1) * pts]
+                                for f in fields_of[o]])
+                for r in range(n_ranks)]
+
+    # exch is keyed by rank only: iteration it+1's exchange task cannot
+    # start before iteration it's readers finished (it is gated through
+    # unpack → phys), so each slot is safely overwritten and peak memory
+    # stays O(n_grid × n_fields) instead of growing with step count.
+    def a2a_g2s(r, it):
+        exch[("g2s", r)] = coll.alltoall(
+            pack_g2s(r), rank=r, mode=a2a_mode, key=("g2s", it))
+
+    def a2a_s2g(o, it):
+        exch[("s2g", o)] = coll.alltoall(
+            pack_s2g(o), rank=o, mode=a2a_mode, key=("s2g", it))
+
+    def fft_field(f, it):
         o = owner(f)
-        parts = []
-        handles = [world.irecv(src=r, dst=o, tag=("g2s", f, r, it))
-                   for r in range(n_ranks)]
-        if version == "interop-nonblk":
-            # bind all receives; a successor task does the FFT
-            tac.iwaitall(handles)
-            spec[(f, it, "handles")] = handles
-        else:
-            parts = [tac.wait(h) for h in handles]
-            spec[f] = spectral_step(np.concatenate(parts))
+        parts = exch[("g2s", o)]
+        if isinstance(parts, tac.AsyncHandle):
+            parts = parts.result
+        j = fields_of[o].index(f)
+        full = np.concatenate([parts[s][j * pts:(j + 1) * pts]
+                               for s in range(n_ranks)])
+        spec[f] = spectral_step(full)
 
-    def fft_after_events(f, it):
-        handles = spec.pop((f, it, "handles"))
-        parts = [h.result for h in handles]
-        spec[f] = spectral_step(np.concatenate(parts))
-
-    def scatter(f, it):
-        full = spec[f]
-        for r in range(n_ranks):
-            world.isend(full[r * pts:(r + 1) * pts].copy(), src=owner(f),
-                        dst=r, tag=("s2g", f, r, it))
-
-    def recv_slice(f, r, it):
-        h = world.irecv(src=owner(f), dst=r, tag=("s2g", f, r, it))
-        if version == "interop-nonblk":
-            tac.iwait(h)
-            grid[(f, r, "h")] = h
-        else:
-            grid[(f, r)] = tac.wait(h)
-
-    def unpack(f, r, it):
-        h = grid.pop((f, r, "h"), None)
-        if h is not None:
-            grid[(f, r)] = h.result
+    def unpack(r, it):
+        parts = exch.pop(("s2g", r))
+        if isinstance(parts, tac.AsyncHandle):
+            parts = parts.result
+        for o in range(n_ranks):
+            for j, f in enumerate(fields_of[o]):
+                grid[(f, r)] = parts[o][j * pts:(j + 1) * pts]
 
     for it in range(steps):
         if version == "pure":
             for f in range(n_fields):
                 for r in range(n_ranks):
                     phys_task(f, r, it)
+            g2s = coll.run_group(
+                "alltoall", [{"blocks": pack_g2s(r)}
+                             for r in range(n_ranks)], key=("g2s", it))
+            for r in range(n_ranks):
+                exch[("g2s", r)] = g2s[r]
             for f in range(n_fields):
-                for r in range(n_ranks):
-                    send_slice(f, r, it)
-            for f in range(n_fields):
-                o = owner(f)
-                parts = [world.irecv(src=r, dst=o,
-                                     tag=("g2s", f, r, it)).result
-                         for r in range(n_ranks)]
-                spec[f] = spectral_step(np.concatenate(parts))
-            for f in range(n_fields):
-                scatter(f, it)
-            for f in range(n_fields):
-                for r in range(n_ranks):
-                    grid[(f, r)] = world.irecv(
-                        src=owner(f), dst=r, tag=("s2g", f, r, it)).result
+                fft_field(f, it)
+            s2g = coll.run_group(
+                "alltoall", [{"blocks": pack_s2g(o)}
+                             for o in range(n_ranks)], key=("s2g", it))
+            for o in range(n_ranks):
+                exch[("s2g", o)] = s2g[o]
+            for r in range(n_ranks):
+                unpack(r, it)
             continue
 
-        for f in range(n_fields):
-            for r in range(n_ranks):
+        for r in range(n_ranks):
+            for f in range(n_fields):
                 rt.submit(phys_task, f, r, it, inout=[("g", f, r)],
                           name=f"phys[{f},{r}]@{it}", label="compute")
-                rt.submit(send_slice, f, r, it, in_=[("g", f, r)],
-                          name=f"snd[{f},{r}]@{it}", label="comm")
-            rt.submit(gather_fft, f, it, out=[("s", f)],
-                      name=f"fft[{f}]@{it}", label="comm")
-            if version == "interop-nonblk":
-                rt.submit(fft_after_events, f, it, inout=[("s", f)],
-                          name=f"fin[{f}]@{it}", label="compute")
-            rt.submit(scatter, f, it, in_=[("s", f)],
-                      name=f"sct[{f}]@{it}", label="comm")
-            for r in range(n_ranks):
-                rt.submit(recv_slice, f, r, it, out=[("g", f, r)],
-                          name=f"rcv[{f},{r}]@{it}", label="comm")
-                if version == "interop-nonblk":
-                    rt.submit(unpack, f, r, it, inout=[("g", f, r)],
-                              name=f"unp[{f},{r}]@{it}", label="compute")
+        for r in range(n_ranks):
+            rt.submit(a2a_g2s, r, it,
+                      in_=[("g", f, r) for f in range(n_fields)],
+                      out=[("xg", r, it)], label="comm",
+                      name=f"a2a_g2s[{r}]@{it}")
+        for f in range(n_fields):
+            rt.submit(fft_field, f, it, in_=[("xg", owner(f), it)],
+                      out=[("s", f)], label="compute",
+                      name=f"fft[{f}]@{it}")
+        for o in range(n_ranks):
+            rt.submit(a2a_s2g, o, it,
+                      in_=[("s", f) for f in fields_of[o]],
+                      out=[("xs", o, it)], label="comm",
+                      name=f"a2a_s2g[{o}]@{it}")
+        for r in range(n_ranks):
+            rt.submit(unpack, r, it, in_=[("xs", r, it)],
+                      inout=[("g", f, r) for f in range(n_fields)],
+                      label="compute", name=f"unp[{r}]@{it}")
 
     rt.taskwait()
     stats = dict(rt.stats)
@@ -163,15 +179,18 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
 # ---------------------------------------------------------------------------
 def build_sim(version, *, n_ranks, n_fields=64, steps=6, t_phys=1.0,
               t_fft=1.0, t_comm=0.02, latency=0.05):
+    """Replays the DAG the real versions now execute: per-rank ``alltoall``
+    collective nodes for each transposition (g2s / s2g), with the waiting
+    discipline of the version (held / paused / event-bound)."""
     tasks: List[SimTask] = []
     index: Dict[str, int] = {}
 
-    def add(rank, cost, kind=COMPUTE, start=(), events=(), name=""):
+    def add(rank, cost, kind=COMPUTE, start=(), name="", group=None,
+            group_latency=0.0):
         t = SimTask(len(tasks), rank, cost, kind=kind,
                     start_deps=[(index[s], 0.0) for s in start
                                 if s and s in index],
-                    event_deps=[(index[e], latency) for e in events
-                                if e and e in index], name=name)
+                    name=name, group=group, group_latency=group_latency)
         tasks.append(t)
         index[name] = t.id
 
@@ -179,54 +198,31 @@ def build_sim(version, *, n_ranks, n_fields=64, steps=6, t_phys=1.0,
             "interop-nonblk": COMM_EVENTS}.get(version, COMM_HELD)
     fl = n_fields // n_ranks  # fields per rank in spectral space
     tp = t_phys / fl          # physics cost per (field, rank) slice
+    a2a_lat = n_rounds("alltoall", "ring", n_ranks) * latency
 
     for it in range(steps):
-        # physics + sends, all fields
-        for f in range(n_fields):
-            for r in range(n_ranks):
-                dep = [f"rcv[{f},{r}]@{it - 1}"] if it else []
-                if version == "pure" and it:
-                    dep = [f"stepend[{r}]@{it - 1}"]
-                add(r, tp, start=dep, name=f"phys[{f},{r}]@{it}")
-                add(r, t_comm / n_ranks, start=[f"phys[{f},{r}]@{it}"],
-                    name=f"snd[{f},{r}]@{it}")
-        if version == "pure":
-            # barrier: the sequential exchange completes before any FFT
-            for r in range(n_ranks):
-                add(r, 0.0,
-                    start=[f"snd[{f},{r}]@{it}" for f in range(n_fields)],
-                    name=f"sent[{r}]@{it}")
-        # FFT phase (spectral owners) + scatter back
+        for r in range(n_ranks):
+            for f in range(n_fields):
+                add(r, tp, start=[f"unp[{r}]@{it - 1}"] if it else [],
+                    name=f"phys[{f},{r}]@{it}")
+        for r in range(n_ranks):
+            add(r, t_comm, kind=kind,
+                start=[f"phys[{f},{r}]@{it}" for f in range(n_fields)],
+                group=f"g2s@{it}", group_latency=a2a_lat,
+                name=f"a2a_g2s[{r}]@{it}")
         for f in range(n_fields):
             o = f % n_ranks
-            if version == "pure":
-                add(o, t_fft / fl,
-                    start=[f"sent[{r}]@{it}" for r in range(n_ranks)],
-                    name=f"fft[{f}]@{it}")
-            else:
-                add(o, t_fft / fl, kind=kind,
-                    start=[f"snd[{f},{o}]@{it}"],
-                    events=[f"snd[{f},{r}]@{it}" for r in range(n_ranks)
-                            if r != o],
-                    name=f"fft[{f}]@{it}")
-            add(o, t_comm, start=[f"fft[{f}]@{it}"], name=f"sct[{f}]@{it}")
-        for f in range(n_fields):
-            for r in range(n_ranks):
-                # pure: blocking receives run in program order — after the
-                # rank's own scatter phase (otherwise a held receive would
-                # occupy the sequential flow before its sender ran: §5)
-                start = ([f"sct[{f2}]@{it}" for f2 in range(n_fields)
-                          if f2 % n_ranks == r] if version == "pure"
-                         else [])
-                add(r, t_comm / n_ranks,
-                    kind=kind if version != "pure" else COMM_HELD,
-                    start=start,
-                    events=[f"sct[{f}]@{it}"], name=f"rcv[{f},{r}]@{it}")
-        if version == "pure":
-            for r in range(n_ranks):
-                add(r, 0.0, start=[f"rcv[{f},{r}]@{it}"
-                                   for f in range(n_fields)],
-                    name=f"stepend[{r}]@{it}")
+            add(o, t_fft / fl, start=[f"a2a_g2s[{o}]@{it}"],
+                name=f"fft[{f}]@{it}")
+        for o in range(n_ranks):
+            add(o, t_comm, kind=kind,
+                start=[f"fft[{f}]@{it}" for f in range(n_fields)
+                       if f % n_ranks == o],
+                group=f"s2g@{it}", group_latency=a2a_lat,
+                name=f"a2a_s2g[{o}]@{it}")
+        for r in range(n_ranks):
+            add(r, t_comm, start=[f"a2a_s2g[{r}]@{it}"],
+                name=f"unp[{r}]@{it}")
     return tasks
 
 

@@ -1,0 +1,68 @@
+"""Shims over jax API drift so the runtime spans 0.4.x and 0.5+.
+
+The repo targets the current ``jax.shard_map`` / ``jax.sharding.AxisType``
+surface; this module maps those calls onto the older spellings when running
+under jax 0.4.x (where manual sharding lives in
+``jax.experimental.shard_map`` and meshes have no axis types).  Keep every
+version guard here — call sites should read like modern jax.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional
+
+# jax is imported lazily inside each helper: launch/mesh.py (and the
+# dry-run path behind it) must be importable before the first jax
+# initialisation so XLA_FLAGS can still be set.
+
+
+def mesh_axis_kwargs(n_axes: int) -> Dict[str, Any]:
+    """``axis_types=`` kwarg for ``jax.make_mesh`` on any jax.
+
+    ``jax.sharding.AxisType`` (and the kwarg) only exist from jax 0.5; on
+    0.4.x every mesh axis is Auto-typed already, so the kwarg is omitted.
+    """
+    import jax
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def axis_size(axis_name: Any) -> int:
+    """``jax.lax.axis_size`` (jax ≥ 0.5) on any jax.
+
+    On 0.4.x, ``lax.psum`` of a Python literal is evaluated statically, so
+    ``psum(1, axis)`` yields the axis size as a plain int — usable for
+    reshapes and padding, exactly like the modern primitive.
+    """
+    import jax
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Iterable[Any]] = None,
+              check_vma: bool = False):
+    """``jax.shard_map`` with the modern keyword surface on any jax.
+
+    ``axis_names`` selects the mesh axes that are *manual* inside ``f``
+    (the rest stay auto); on jax 0.4.x this maps onto the old ``auto=``
+    complement-set and ``check_vma`` onto ``check_rep``.
+    """
+    import jax
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        kwargs = {"check_vma": check_vma}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   **kwargs)
+    from jax.experimental.shard_map import shard_map as legacy
+    manual = (frozenset(axis_names) if axis_names is not None
+              else frozenset(mesh.axis_names))
+    auto = frozenset(mesh.axis_names) - manual
+    return legacy(f, mesh, in_specs, out_specs,
+                  check_rep=check_vma, auto=auto)

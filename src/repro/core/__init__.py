@@ -15,6 +15,8 @@ from .taskgraph import Task, TaskGraph
 from .executor import TaskRuntime, TaskError
 from . import tac
 from . import simulate
+from . import collectives
+from .collectives import Collectives, CollectiveHandle
 
 __all__ = [
     # pause/resume API (§4.1)
@@ -27,6 +29,6 @@ __all__ = [
     # runtime
     "Task", "TaskGraph", "TaskRuntime", "TaskError", "BlockingContext",
     "EventCounter", "current_task",
-    # TAMPI analogue
-    "tac", "simulate",
+    # TAMPI analogue + task-aware collectives
+    "tac", "simulate", "collectives", "Collectives", "CollectiveHandle",
 ]

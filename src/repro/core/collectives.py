@@ -1,0 +1,729 @@
+"""Task-aware collectives layered on CommWorld point-to-point (paper §6,
+extended to collectives).
+
+The paper applies the pause/resume and external-events APIs to MPI
+point-to-point; follow-on work (*Callback-based Completion Notification
+using MPI Continuations*; *MPI Progress For All*) shows the same two modes
+extend naturally to collectives when completion is driven by a
+progress/notification engine instead of per-call blocking.  This module
+implements that design for the host runtime:
+
+* Every collective is expressed as a *schedule of point-to-point rounds*
+  over :class:`~repro.core.tac.CommWorld` — a Python generator that posts
+  ``isend``s and yields the ``irecv`` handles it needs completed before the
+  next round.  Two algorithm families are provided per collective:
+
+  - ``ring``      — neighbour rounds (ring/chain/pairwise): ``n-1`` steps,
+                    bandwidth-optimal for large payloads.
+  - ``doubling``  — logarithmic schedules (recursive doubling /
+                    dissemination / binomial tree / Bruck): ``⌈log2 n⌉``
+                    steps, latency-optimal for small payloads.  Non-power-
+                    of-two rank counts are handled by folding (reductions)
+                    or by the Bruck construction (gathers/all-to-all),
+                    which works for any ``n`` directly.
+
+* Each collective runs in one of the paper's two interoperability modes:
+
+  - ``mode="blocking"`` (§6.1): the call returns the rank's result; inside
+    a task the rounds are advanced by the progress engine and the task
+    pays a *single* test → register ticket → pause on the completion
+    handle (one pause per collective, not per round — per-round pausing
+    would deadlock help-first nested blocking, whose LIFO stacks cannot
+    interleave two in-flight multi-round schedules).  Outside a task (or
+    without ``TASK_MULTIPLE``) the schedule is driven inline with plain
+    OS-level waits, exactly like the point-to-point wrappers.
+
+  - ``mode="event"`` (§6.2): the call returns a
+    :class:`CollectiveHandle` *immediately* and binds one external event
+    to the calling task.  The remaining rounds are advanced by a
+    :class:`ProgressEngine` registered as a polling service — the
+    continuation/progress-engine design of the follow-on papers: no live
+    stack, no context switch, sends of later rounds are posted by the
+    polling thread as their inputs arrive.  The task's dependencies are
+    released only when the collective completes; successors read
+    ``handle.result``.
+
+Determinism: within one collective all ranks apply the combining operator
+in matching order, so every rank finishes with a bitwise-identical result
+(for commutative IEEE ops like add/max).  Tag space is isolated per call —
+either through the per-rank call sequence (MPI's "same order on every
+rank" rule) or an explicit ``key`` for programs whose task schedulers may
+reorder independent collectives.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from . import tac
+from .events import (current_task, get_current_event_counter,
+                     increase_current_task_event_counter,
+                     decrease_task_event_counter)
+
+__all__ = ["Collectives", "CollectiveHandle", "ProgressEngine", "n_rounds",
+           "ALGORITHMS", "MODES"]
+
+ALGORITHMS = ("ring", "doubling")
+MODES = ("blocking", "event")
+
+_OPS: Dict[str, Callable] = {"sum": np.add, "prod": np.multiply,
+                             "max": np.maximum, "min": np.minimum}
+
+_ALG_ALIASES = {"ring": "ring", "chain": "ring", "pairwise": "ring",
+                "doubling": "doubling", "recursive-doubling": "doubling",
+                "rd": "doubling", "tree": "doubling", "bruck": "doubling",
+                "dissemination": "doubling"}
+_MODE_ALIASES = {"blocking": "blocking", "wait": "blocking",
+                 "event": "event", "iwait": "event",
+                 "nonblocking": "event", "non-blocking": "event"}
+
+
+def _op_fn(op) -> Callable:
+    if callable(op):
+        return op
+    try:
+        return _OPS[op]
+    except KeyError:
+        raise ValueError(f"unknown reduction op {op!r}; "
+                         f"use one of {sorted(_OPS)} or a callable")
+
+
+def _norm_alg(algorithm: str) -> str:
+    try:
+        return _ALG_ALIASES[algorithm]
+    except KeyError:
+        raise ValueError(f"unknown algorithm {algorithm!r}; "
+                         f"aliases: {sorted(_ALG_ALIASES)}")
+
+
+def _norm_mode(mode: str) -> str:
+    try:
+        return _MODE_ALIASES[mode]
+    except KeyError:
+        raise ValueError(f"unknown mode {mode!r}; "
+                         f"aliases: {sorted(_MODE_ALIASES)}")
+
+
+def n_rounds(name: str, algorithm: str, size: int) -> int:
+    """Message rounds on the critical path — the simulator's latency model."""
+    if size <= 1:
+        return 0
+    alg = _norm_alg(algorithm)
+    log2_ceil = max(1, math.ceil(math.log2(size)))
+    if alg == "doubling":
+        # Reductions butterfly over 2^⌊log2 n⌋ after folding the remainder
+        # ranks (+1 fold and +1 unfold round when n is not a power of two).
+        butterfly = size.bit_length() - 1
+        extra = 0 if size & (size - 1) == 0 else 2
+        return {"allreduce": butterfly + extra,
+                "reduce_scatter": butterfly + extra,
+                "reduce": log2_ceil, "bcast": log2_ceil,
+                "barrier": log2_ceil, "allgather": log2_ceil,
+                "alltoall": log2_ceil}[name]
+    return {"allreduce": 2 * (size - 1)}.get(name, size - 1)
+
+
+class CollectiveHandle(tac.EventHandle):
+    """Completion handle of an event-bound collective (result at release).
+
+    A schedule failure (bad payloads, a raising ``op``...) completes the
+    handle with the exception stored; ``result`` re-raises it on whichever
+    thread consumes the collective, so errors surface instead of killing
+    the polling service or hanging ``taskwait``.
+    """
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.error: Optional[BaseException] = None
+
+    def fail(self, exc: BaseException) -> None:
+        self.error = exc
+        self.complete(None)
+
+    @property
+    def result(self) -> Any:
+        if self.error is not None:
+            raise self.error
+        return self._result
+
+
+# ---------------------------------------------------------------------------
+# Generator-driven state machines + progress engine
+# ---------------------------------------------------------------------------
+class _Machine:
+    """One rank's collective schedule, advanced as its handles complete.
+
+    The generator yields the handle (or list of handles) it waits on; the
+    driver sends the received payload(s) back in.  ``advance`` is *not*
+    re-entrant: callers must ensure one thread at a time (the progress
+    engine serialises via the polling registry's per-service lock; the
+    group driver is single-threaded).
+    """
+
+    __slots__ = ("gen", "handle", "counter", "steps", "done", "_waiting",
+                 "_started")
+
+    def __init__(self, gen, handle: CollectiveHandle,
+                 counter=None) -> None:
+        self.gen = gen
+        self.handle = handle
+        self.counter = counter
+        self.steps = 0          # resolved waits — progress indicator
+        self.done = False
+        self._waiting: Any = None
+        self._started = False
+
+    def advance(self) -> bool:
+        """Run until the next incomplete wait; True once finished."""
+        if self.done:
+            return True
+        try:
+            if not self._started:
+                self._started = True
+                self._waiting = next(self.gen)
+            while True:
+                w = self._waiting
+                many = isinstance(w, (list, tuple))
+                hs = list(w) if many else [w]
+                if not all(h.test() for h in hs):
+                    return False
+                res = [h.result for h in hs] if many else hs[0].result
+                self.steps += 1
+                self._waiting = self.gen.send(res)
+        except StopIteration as stop:
+            self.done = True
+            self.handle.complete(stop.value)
+            if self.counter is not None:
+                decrease_task_event_counter(self.counter, 1)
+            return True
+        except BaseException as exc:  # noqa: BLE001 - surfaced via handle
+            # A raising schedule must not kill the polling thread or leave
+            # the task's event counter bound forever — fail the handle
+            # (consumers re-raise) and release the dependency.
+            self.done = True
+            self.handle.fail(exc)
+            if self.counter is not None:
+                decrease_task_event_counter(self.counter, 1)
+            return True
+
+
+class ProgressEngine:
+    """Drains event-bound collective machines from the polling service.
+
+    The notification engine of the follow-on papers: completion is detected
+    and *continued* (next rounds posted, results combined, dependencies
+    released) by the runtime's polling threads, never by a blocked caller.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._machines: List[_Machine] = []
+
+    def submit(self, machine: _Machine) -> None:
+        # First advance on the caller's thread (posts the initial sends);
+        # the machine only becomes visible to the poller if still pending,
+        # so `advance` never runs concurrently.
+        if machine.advance():
+            return
+        with self._lock:
+            self._machines.append(machine)
+
+    def poll(self, _data: Any) -> bool:
+        with self._lock:
+            snapshot = list(self._machines)
+        finished = [m for m in snapshot if m.advance()]
+        if finished:
+            with self._lock:
+                self._machines = [m for m in self._machines
+                                  if m not in finished]
+        return False  # stay registered
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._machines)
+
+
+def _engine(runtime) -> ProgressEngine:
+    eng = getattr(runtime, "_coll_engine", None)
+    if eng is None:
+        with runtime._lock:
+            eng = getattr(runtime, "_coll_engine", None)
+            if eng is None:
+                eng = ProgressEngine()
+                runtime.polling.register_polling_service(
+                    "collective progress engine", eng.poll, None)
+                runtime._coll_engine = eng  # type: ignore[attr-defined]
+    return eng
+
+
+def _drive_blocking(gen):
+    """Drive a schedule with task-aware waits (pause/resume per round)."""
+    try:
+        w = next(gen)
+        while True:
+            if isinstance(w, (list, tuple)):
+                res = tac.waitall(list(w))
+            else:
+                res = tac.wait(w)
+            w = gen.send(res)
+    except StopIteration as stop:
+        return stop.value
+
+
+def _drive_group(machines: Sequence[_Machine]) -> None:
+    """Round-robin all ranks' machines on the calling thread.
+
+    The deterministic single-threaded driver: used by the sequential
+    ('pure'/fork-join) benchmark versions and by tests that need a
+    collective without a task runtime.  All matching is in-memory and
+    eager, so a full pass with zero progress means the schedule itself is
+    stuck — reported instead of spinning.
+    """
+    pending = [m for m in machines if not m.advance()]
+    while pending:
+        progressed = False
+        nxt = []
+        for m in pending:
+            before = m.steps
+            if m.advance() or m.steps != before:
+                progressed = True
+            if not m.done:
+                nxt.append(m)
+        if nxt and not progressed:
+            # A failed rank stalls its peers (their recvs never match);
+            # surface the root cause rather than the symptom.
+            for m in machines:
+                if m.handle.error is not None:
+                    raise m.handle.error
+            names = [getattr(m.gen, "__name__", "?") for m in nxt]
+            raise RuntimeError(
+                f"collective group stalled: {len(nxt)} ranks cannot "
+                f"progress ({names}) — mismatched call order or rank set")
+        pending = nxt
+
+
+# ---------------------------------------------------------------------------
+# Schedules.  Each generator: posts isends, yields irecv handle(s), receives
+# the payload(s) via send(); StopIteration.value is the rank's result.
+# ---------------------------------------------------------------------------
+def _barrier_dissemination(w: tac.CommWorld, n: int, r: int, tag):
+    k, rnd = 1, 0
+    while k < n:
+        w.isend(True, src=r, dst=(r + k) % n, tag=tag(rnd))
+        yield w.irecv(src=(r - k) % n, dst=r, tag=tag(rnd))
+        k <<= 1
+        rnd += 1
+    return None
+
+
+def _barrier_ring(w: tac.CommWorld, n: int, r: int, tag):
+    # n-1 neighbour rounds: afterwards every rank has transitively heard
+    # from every other, so none can exit before all have entered.
+    for k in range(n - 1):
+        w.isend(True, src=r, dst=(r + 1) % n, tag=tag(k))
+        yield w.irecv(src=(r - 1) % n, dst=r, tag=tag(k))
+    return None
+
+
+def _bcast_tree(w: tac.CommWorld, n: int, r: int, tag, value, root: int):
+    """Binomial-tree broadcast (MPICH-style), any rank count."""
+    vr = (r - root) % n
+    buf = value
+    mask = 1
+    while mask < n:
+        if vr & mask:
+            buf = yield w.irecv(src=(r - mask) % n, dst=r, tag=tag(mask))
+            break
+        mask <<= 1
+    mask >>= 1
+    while mask:
+        if vr + mask < n:
+            w.isend(buf, src=r, dst=(r + mask) % n, tag=tag(mask))
+        mask >>= 1
+    return buf
+
+
+def _bcast_chain(w: tac.CommWorld, n: int, r: int, tag, value, root: int):
+    vr = (r - root) % n
+    buf = value
+    if vr > 0:
+        buf = yield w.irecv(src=(r - 1) % n, dst=r, tag=tag("c"))
+    if vr < n - 1:
+        w.isend(buf, src=r, dst=(r + 1) % n, tag=tag("c"))
+    return buf
+
+
+def _reduce_tree(w: tac.CommWorld, n: int, r: int, tag, value, op,
+                 root: int):
+    """Binomial-tree reduction to ``root`` (commutative ``op``)."""
+    vr = (r - root) % n
+    acc = value
+    mask = 1
+    while mask < n:
+        if vr & mask:
+            w.isend(acc, src=r, dst=(r - mask) % n, tag=tag(mask))
+            return None
+        partner_vr = vr | mask
+        if partner_vr < n:
+            other = yield w.irecv(src=(r + mask) % n, dst=r, tag=tag(mask))
+            acc = op(acc, other)
+        mask <<= 1
+    return acc
+
+
+def _reduce_chain(w: tac.CommWorld, n: int, r: int, tag, value, op,
+                  root: int):
+    vr = (r - root) % n
+    acc = value
+    if vr < n - 1:
+        other = yield w.irecv(src=(r + 1) % n, dst=r, tag=tag("c"))
+        acc = op(acc, other)
+    if vr > 0:
+        w.isend(acc, src=r, dst=(r - 1) % n, tag=tag("c"))
+        return None
+    return acc
+
+
+def _allreduce_ring(w: tac.CommWorld, n: int, r: int, tag, value, op):
+    """Ring allreduce: reduce-scatter rounds then allgather rounds."""
+    arr = np.asarray(value)
+    chunks = list(np.array_split(arr.reshape(-1), n))
+    right, left = (r + 1) % n, (r - 1) % n
+    for k in range(n - 1):          # reduce-scatter: end owning chunk r
+        w.isend(chunks[(r - 1 - k) % n], src=r, dst=right, tag=tag(("s", k)))
+        other = yield w.irecv(src=left, dst=r, tag=tag(("s", k)))
+        i = (r - 2 - k) % n
+        chunks[i] = op(chunks[i], other)
+    for k in range(n - 1):          # allgather the reduced chunks
+        w.isend(chunks[(r - k) % n], src=r, dst=right, tag=tag(("g", k)))
+        other = yield w.irecv(src=left, dst=r, tag=tag(("g", k)))
+        chunks[(r - k - 1) % n] = other
+    return np.concatenate(chunks).reshape(arr.shape)
+
+
+def _allreduce_doubling(w: tac.CommWorld, n: int, r: int, tag, value, op):
+    """Recursive doubling with the fold/unfold trick for non-power-of-two
+    rank counts: the ``rem = n - 2^⌊log2 n⌋`` odd ranks below ``2*rem``
+    fold into their even partners, the power-of-two remainder runs the
+    butterfly, results are unfolded back."""
+    acc = np.asarray(value)
+    pow2 = 1 << (n.bit_length() - 1)
+    rem = n - pow2
+    if r < 2 * rem:
+        if r % 2:
+            w.isend(acc, src=r, dst=r - 1, tag=tag("fold"))
+            result = yield w.irecv(src=r - 1, dst=r, tag=tag("unfold"))
+            return result
+        other = yield w.irecv(src=r + 1, dst=r, tag=tag("fold"))
+        acc = op(acc, other)
+        vr = r // 2
+    else:
+        vr = r - rem
+    mask = 1
+    while mask < pow2:
+        partner_vr = vr ^ mask
+        partner = partner_vr * 2 if partner_vr < rem else partner_vr + rem
+        w.isend(acc, src=r, dst=partner, tag=tag(("x", mask)))
+        other = yield w.irecv(src=partner, dst=r, tag=tag(("x", mask)))
+        acc = op(acc, other)
+        mask <<= 1
+    if r < 2 * rem:
+        w.isend(acc, src=r, dst=r + 1, tag=tag("unfold"))
+    return acc
+
+
+def _allgather_ring(w: tac.CommWorld, n: int, r: int, tag, value):
+    items: List[Any] = [None] * n
+    items[r] = value
+    right, left = (r + 1) % n, (r - 1) % n
+    for k in range(n - 1):
+        w.isend(items[(r - k) % n], src=r, dst=right, tag=tag(k))
+        items[(r - k - 1) % n] = yield w.irecv(src=left, dst=r, tag=tag(k))
+    return items
+
+
+def _allgather_bruck(w: tac.CommWorld, n: int, r: int, tag, value):
+    """Bruck allgather: ⌈log2 n⌉ rounds, any rank count."""
+    acc: List[Any] = [value]
+    k = 1
+    while k < n:
+        cnt = min(k, n - k)
+        w.isend(tuple(acc[:cnt]), src=r, dst=(r - k) % n, tag=tag(k))
+        got = yield w.irecv(src=(r + k) % n, dst=r, tag=tag(k))
+        acc.extend(got)
+        k <<= 1
+    # acc[j] is rank (r + j) % n's contribution
+    return [acc[(i - r) % n] for i in range(n)]
+
+
+def _reduce_scatter_ring(w: tac.CommWorld, n: int, r: int, tag, value, op):
+    chunks = list(np.array_split(np.asarray(value).reshape(-1), n))
+    right, left = (r + 1) % n, (r - 1) % n
+    for k in range(n - 1):
+        w.isend(chunks[(r - 1 - k) % n], src=r, dst=right, tag=tag(k))
+        other = yield w.irecv(src=left, dst=r, tag=tag(k))
+        i = (r - 2 - k) % n
+        chunks[i] = op(chunks[i], other)
+    return chunks[r]
+
+
+def _reduce_scatter_doubling(w: tac.CommWorld, n: int, r: int, tag, value,
+                             op):
+    # Recursive-halving needs a power-of-two block mapping that clashes
+    # with n-way output blocks; run the doubling allreduce and slice — the
+    # same logarithmic round structure, trade payload for simplicity.
+    full = yield from _allreduce_doubling(w, n, r, tag, value, op)
+    return np.array_split(np.asarray(full).reshape(-1), n)[r]
+
+
+def _alltoall_pairwise(w: tac.CommWorld, n: int, r: int, tag, blocks):
+    result: List[Any] = [None] * n
+    result[r] = blocks[r]
+    for k in range(1, n):
+        dst, src = (r + k) % n, (r - k) % n
+        w.isend(blocks[dst], src=r, dst=dst, tag=tag(k))
+        result[src] = yield w.irecv(src=src, dst=r, tag=tag(k))
+    return result
+
+
+def _alltoall_bruck(w: tac.CommWorld, n: int, r: int, tag, blocks):
+    """Bruck all-to-all: rotate, ⌈log2 n⌉ bit-rounds, inverse rotate."""
+    tmp = [blocks[(r + j) % n] for j in range(n)]
+    k = 1
+    while k < n:
+        idxs = [j for j in range(n) if j & k]
+        w.isend(tuple(tmp[j] for j in idxs), src=r, dst=(r + k) % n,
+                tag=tag(k))
+        got = yield w.irecv(src=(r - k) % n, dst=r, tag=tag(k))
+        for j, g in zip(idxs, got):
+            tmp[j] = g
+        k <<= 1
+    return [tmp[(r - i) % n] for i in range(n)]
+
+
+# Per-op default algorithm, shared by the per-rank methods and run_group:
+# latency-optimal doubling for the rooted/small ops, bandwidth-optimal ring
+# for the bulk ones.
+_DEFAULT_ALGORITHM = {
+    "barrier": "doubling", "bcast": "doubling", "reduce": "doubling",
+    "allreduce": "ring", "allgather": "ring", "reduce_scatter": "ring",
+    "alltoall": "ring",
+}
+
+_SCHEDULES = {
+    ("barrier", "doubling"): _barrier_dissemination,
+    ("barrier", "ring"): _barrier_ring,
+    ("bcast", "doubling"): _bcast_tree,
+    ("bcast", "ring"): _bcast_chain,
+    ("reduce", "doubling"): _reduce_tree,
+    ("reduce", "ring"): _reduce_chain,
+    ("allreduce", "doubling"): _allreduce_doubling,
+    ("allreduce", "ring"): _allreduce_ring,
+    ("allgather", "doubling"): _allgather_bruck,
+    ("allgather", "ring"): _allgather_ring,
+    ("reduce_scatter", "doubling"): _reduce_scatter_doubling,
+    ("reduce_scatter", "ring"): _reduce_scatter_ring,
+    ("alltoall", "doubling"): _alltoall_bruck,
+    ("alltoall", "ring"): _alltoall_pairwise,
+}
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+class Collectives:
+    """Collective operations over a :class:`tac.CommWorld`.
+
+    Every rank participating in a collective calls the same method (from
+    its own task or thread).  Tag isolation follows MPI's rule — each rank
+    must issue its collectives in the same order — via per-rank sequence
+    counters; programs whose schedulers may reorder *independent*
+    collectives pass an explicit ``key`` instead (any hashable, identical
+    on all ranks of one collective).
+
+    ``mode="blocking"`` returns the rank's result (pausing the task per
+    round); ``mode="event"`` returns a :class:`CollectiveHandle` bound to
+    the calling task's event counter — consume ``handle.result`` from a
+    successor task.
+    """
+
+    def __init__(self, world: tac.CommWorld) -> None:
+        self.world = world
+        self._seq = [itertools.count() for _ in range(world.size)]
+
+    # -- plumbing ----------------------------------------------------------
+    def _tagger(self, name: str, rank: int, key: Any):
+        if key is None:
+            key = next(self._seq[rank])
+        def tag(sub: Any):
+            return ("coll", name, key, sub)
+        return tag
+
+    def _schedule(self, name: str, algorithm: str, rank: int, key: Any,
+                  *args):
+        n = self.world.size
+        if not 0 <= rank < n:
+            raise ValueError(f"rank {rank} out of range for size {n}")
+        fn = _SCHEDULES[(name, _norm_alg(algorithm))]
+        return fn(self.world, n, rank, self._tagger(name, rank, key), *args)
+
+    def _run(self, name: str, algorithm: Optional[str], rank: int,
+             key: Any, mode: str, *args):
+        # Normalize/validate EVERYTHING before _schedule consumes the
+        # per-rank tag sequence — a rejected call must not desynchronize
+        # this rank's subsequent keyless collectives from its peers.
+        mode = _norm_mode(mode)
+        algorithm = algorithm or _DEFAULT_ALGORITHM[name]
+        return self._execute(
+            self._schedule(name, algorithm, rank, key, *args), mode)
+
+    def _execute(self, gen, mode: str):
+        task = current_task()
+        if not (tac.is_enabled() and task is not None):
+            # PMPI path: drive the schedule inline with OS-level waits
+            # (each rank on its own thread, like MPI processes).
+            result = _drive_blocking(gen)
+            if mode == "blocking":
+                return result
+            handle = CollectiveHandle()
+            handle.complete(result)
+            return handle
+        # TASK_MULTIPLE: the progress engine advances the rounds from the
+        # polling service, so the task never holds a live round mid-stack —
+        # blocking mode pays ONE pause on the completion handle (not one
+        # per round, which would deadlock help-first nested blocking),
+        # event mode binds the handle to the task's event counter.
+        handle = CollectiveHandle()
+        if mode == "blocking":
+            _engine(task._runtime).submit(_Machine(gen, handle))
+            return tac.wait(handle)
+        counter = get_current_event_counter()
+        increase_current_task_event_counter(counter, 1)
+        _engine(task._runtime).submit(_Machine(gen, handle, counter))
+        return handle
+
+    # -- the seven collectives ---------------------------------------------
+    # algorithm=None picks the per-op default from _DEFAULT_ALGORITHM
+    # (latency-optimal doubling for the rooted/small ops, bandwidth-optimal
+    # ring for the bulk ones) — shared with run_group so the two entry
+    # points can never drift apart.
+    def barrier(self, *, rank: int, algorithm: Optional[str] = None,
+                mode: str = "blocking", key: Any = None):
+        return self._run("barrier", algorithm, rank, key, mode)
+
+    def bcast(self, value: Any = None, *, rank: int, root: int = 0,
+              algorithm: Optional[str] = None, mode: str = "blocking",
+              key: Any = None):
+        return self._run("bcast", algorithm, rank, key, mode, value, root)
+
+    def reduce(self, value: Any, *, rank: int, op="sum", root: int = 0,
+               algorithm: Optional[str] = None, mode: str = "blocking",
+               key: Any = None):
+        return self._run("reduce", algorithm, rank, key, mode,
+                         np.asarray(value), _op_fn(op), root)
+
+    def allreduce(self, value: Any, *, rank: int, op="sum",
+                  algorithm: Optional[str] = None, mode: str = "blocking",
+                  key: Any = None):
+        return self._run("allreduce", algorithm, rank, key, mode,
+                         np.asarray(value), _op_fn(op))
+
+    def allgather(self, value: Any, *, rank: int,
+                  algorithm: Optional[str] = None, mode: str = "blocking",
+                  key: Any = None):
+        """Returns the list of every rank's contribution, rank order."""
+        return self._run("allgather", algorithm, rank, key, mode, value)
+
+    def reduce_scatter(self, value: Any, *, rank: int, op="sum",
+                       algorithm: Optional[str] = None,
+                       mode: str = "blocking", key: Any = None):
+        """Returns this rank's ``np.array_split`` chunk of the flattened
+        element-wise reduction."""
+        return self._run("reduce_scatter", algorithm, rank, key, mode,
+                         np.asarray(value), _op_fn(op))
+
+    def alltoall(self, blocks: Sequence[Any], *, rank: int,
+                 algorithm: Optional[str] = None, mode: str = "blocking",
+                 key: Any = None):
+        """``blocks[d]`` goes to rank ``d``; returns blocks received,
+        indexed by source rank."""
+        blocks = list(blocks)
+        if len(blocks) != self.world.size:
+            raise ValueError(f"alltoall needs exactly {self.world.size} "
+                             f"blocks, got {len(blocks)}")
+        return self._run("alltoall", algorithm, rank, key, mode, blocks)
+
+    # -- single-threaded group driver --------------------------------------
+    def run_group(self, name: str, per_rank: Sequence[Dict[str, Any]],
+                  **common: Any) -> List[Any]:
+        """Run one collective for ALL ranks round-robin on this thread.
+
+        The sequential ('pure'/fork-join) execution path and the
+        deterministic test driver: no runtime, no threads, no pausing.
+        ``per_rank[r]`` holds rank-specific kwargs (e.g. ``value``);
+        ``common`` the shared ones (``op``, ``algorithm``, ``key``...).
+        Returns the per-rank results in rank order.
+        """
+        if len(per_rank) != self.world.size:
+            raise ValueError(f"need kwargs for all {self.world.size} ranks")
+        machines = []
+        for r, kw in enumerate(per_rank):
+            gen = self._make_gen(name, rank=r, **dict(common, **kw))
+            machines.append(_Machine(gen, CollectiveHandle()))
+        _drive_group(machines)
+        return [m.handle.result for m in machines]
+
+    _GROUP_SPEC = {
+        # name -> (accepted kwargs, required kwargs)
+        "barrier": (set(), set()),
+        "bcast": ({"value", "root"}, set()),
+        "reduce": ({"value", "op", "root"}, {"value"}),
+        "allreduce": ({"value", "op"}, {"value"}),
+        "allgather": ({"value"}, {"value"}),
+        "reduce_scatter": ({"value", "op"}, {"value"}),
+        "alltoall": ({"blocks"}, {"blocks"}),
+    }
+
+    def _make_gen(self, name: str, *, rank: int,
+                  algorithm: Optional[str] = None, key: Any = None, **kw):
+        if name not in self._GROUP_SPEC:
+            raise ValueError(f"unknown collective {name!r}; "
+                             f"one of {sorted(self._GROUP_SPEC)}")
+        accepted, required = self._GROUP_SPEC[name]
+        unknown = set(kw) - accepted
+        if unknown:
+            # `mode` lands here too: run_group drives all ranks inline.
+            raise ValueError(
+                f"{name}: unexpected argument(s) {sorted(unknown)}; "
+                f"accepted: {sorted(accepted | {'algorithm', 'key'})}")
+        missing = required - set(kw)
+        if missing:
+            raise ValueError(f"{name}: missing argument(s) "
+                             f"{sorted(missing)}")
+        algorithm = algorithm or _DEFAULT_ALGORITHM[name]
+        if name == "barrier":
+            return self._schedule(name, algorithm, rank, key)
+        if name == "bcast":
+            return self._schedule(name, algorithm, rank, key,
+                                  kw.get("value"), kw.get("root", 0))
+        if name == "reduce":
+            return self._schedule(name, algorithm, rank, key,
+                                  np.asarray(kw["value"]),
+                                  _op_fn(kw.get("op", "sum")),
+                                  kw.get("root", 0))
+        if name in ("allreduce", "reduce_scatter"):
+            return self._schedule(name, algorithm, rank, key,
+                                  np.asarray(kw["value"]),
+                                  _op_fn(kw.get("op", "sum")))
+        if name == "allgather":
+            return self._schedule(name, algorithm, rank, key, kw["value"])
+        blocks = list(kw["blocks"])
+        if len(blocks) != self.world.size:
+            raise ValueError("alltoall block count != world size")
+        return self._schedule(name, algorithm, rank, key, blocks)

@@ -34,6 +34,8 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
+
 DEFAULT_BUCKET_BYTES = 4 << 20
 
 
@@ -80,7 +82,7 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
             assert len(axis_arg) == 1, "int8 path: single reduction axis"
             return quantized_psum_mean(x.astype(jnp.float32),
                                        axis_arg[0]) * \
-                jax.lax.axis_size(axis_arg[0])  # sync_grads divides later
+                axis_size(axis_arg[0])  # sync_grads divides later
         if compress == "bf16":
             x = x.astype(jnp.bfloat16)
         x = jax.lax.psum(x, axis_arg)
@@ -119,7 +121,7 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
         # DP world size is static inside shard_map — no collective needed.
         ws = 1.0
         for a in axis_arg:
-            ws *= jax.lax.axis_size(a)
+            ws *= axis_size(a)
         out = [o / ws for o in out]
     return treedef.unflatten([o.astype(l.dtype)
                               for o, l in zip(out, leaves)])
@@ -140,7 +142,7 @@ def quantized_psum_mean(x: jax.Array, axis: str) -> jax.Array:
     gradients under Adam's normalisation; see EXPERIMENTS.md).
     Must run inside shard_map manual over ``axis``.
     """
-    world = jax.lax.axis_size(axis)
+    world = axis_size(axis)
     n = x.size
     pad = (-n) % world
     if pad:
@@ -174,7 +176,7 @@ def halo_exchange_rows(x, axis_name: str, *, width: int = 1
     (top_halo, bottom_halo) received from the previous/next shard (zeros at
     the domain edges).  Inside shard_map manual over ``axis_name``.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     down = [(i, (i + 1) % n) for i in range(n)]   # send my last rows down
     up = [(i, (i - 1) % n) for i in range(n)]     # send my first rows up

@@ -25,6 +25,16 @@ distinguish the paper's versions:
 Dependencies are split accordingly: ``start_deps`` gate the task's start
 (regular data flow), ``event_deps`` are bound external events that gate only
 its release.  Cross-rank edges carry a latency.
+
+**Collective nodes**: tasks sharing a ``group`` label model one collective
+operation — every member must *enter* (finish its body) before any member
+completes, plus ``group_latency`` (≈ rounds × per-message latency, see
+``collectives.n_rounds``).  The waiting discipline is the member's ``kind``:
+``comm-held`` members hold their worker until the last rank arrives (the
+sentinel/serialized collective), ``comm-paused`` pause and pay a resume,
+``comm-events`` finish immediately and defer their release to collective
+completion (the event-bound collective).  Internally a group is expanded
+into pairwise event edges, so all four disciplines compose unchanged.
 """
 
 from __future__ import annotations
@@ -51,10 +61,13 @@ class SimTask:
     start_deps: List[Dep] = field(default_factory=list)
     event_deps: List[Dep] = field(default_factory=list)
     name: str = ""
+    group: Optional[str] = None      # collective membership label
+    group_latency: float = 0.0       # arrival→completion lag of the group
 
     # runtime state
     _pending_start: int = 0
     _pending_events: int = 0
+    _had_events: bool = False
     _body_done_at: Optional[float] = None
     _holding_worker: bool = False
     done_time: Optional[float] = None
@@ -93,6 +106,7 @@ class Simulator:
         for t in tasks:
             t._pending_start = len(t.start_deps)
             t._pending_events = len(t.event_deps)
+            t._had_events = bool(t.event_deps)
             t._body_done_at = None
             t._holding_worker = False
             t.done_time = None
@@ -101,6 +115,28 @@ class Simulator:
                 succ_start[dep].append((t.id, lat))
             for dep, lat in t.event_deps:
                 succ_event[dep].append((t.id, lat))
+
+        # Collective groups: each member waits (per its kind's discipline)
+        # for every other member's arrival + the group's round latency —
+        # expanded into pairwise event edges (non-destructively, per run).
+        groups: Dict[str, List[SimTask]] = {}
+        for t in tasks:
+            if t.group is not None:
+                if t.kind == COMPUTE:
+                    raise ValueError(
+                        f"collective member {t.name or t.id} must use a "
+                        f"comm kind (held/paused/events), not {COMPUTE!r}")
+                groups.setdefault(t.group, []).append(t)
+        for members in groups.values():
+            for t in members:
+                # Edges from every member INCLUDING itself: completion is
+                # last-arrival + group_latency for all members (the last
+                # arriver still pays the rounds after it enters).
+                if len(members) > 1 or t.group_latency > 0.0:
+                    t._pending_events += len(members)
+                    t._had_events = True
+                    for m in members:
+                        succ_event[m.id].append((t.id, t.group_latency))
 
         free = {r: self.workers for r in range(self.n_ranks)}
         ready: Dict[int, List[Tuple[int, SimTask]]] = {
@@ -175,9 +211,8 @@ class Simulator:
                 # the non-blocking mode's dependency graph.
                 for sid, lat in succ_event[task.id]:
                     push(now + lat, "event-arr", sid)
-                if task.kind == COMPUTE or not task.event_deps \
-                        or task._pending_events == 0:
-                    if task.kind == COMM_PAUSED and task.event_deps:
+                if task.kind == COMPUTE or task._pending_events == 0:
+                    if task.kind == COMM_PAUSED and task._had_events:
                         # events already arrived: still pay the round trip
                         free[r] += 1
                         paused += 1

@@ -11,6 +11,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..compat import mesh_axis_kwargs
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """The assigned production mesh.
@@ -21,17 +23,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_axis_kwargs(len(axes)))
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     """A custom mesh (tests, PP demos, elastic restore targets)."""
     import jax
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **mesh_axis_kwargs(len(shape)))
 
 
 def local_mesh(data: Optional[int] = None, model: int = 1):

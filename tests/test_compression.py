@@ -4,6 +4,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow
+
 _ENV = dict(os.environ,
             XLA_FLAGS="--xla_force_host_platform_device_count=8",
             PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -23,6 +27,7 @@ def test_quantized_reduction_accuracy_and_wire_dtype():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.launch.mesh import make_mesh
 from repro.core.overlap import quantized_psum_mean, sync_grads
 
@@ -34,9 +39,9 @@ xs = jax.random.normal(jax.random.PRNGKey(0), (8, n)) * \\
 def f(x_local):
     return quantized_psum_mean(x_local.reshape(-1), "data")
 
-sf = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"),
-                           out_specs=P(), axis_names={"data"},
-                           check_vma=False))
+sf = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
+                       out_specs=P(), axis_names={"data"},
+                       check_vma=False))
 got = np.asarray(sf(xs.reshape(-1)))
 exact = np.asarray(jnp.mean(xs, axis=0))
 tol = float(jnp.max(jnp.abs(xs))) / 127.0 * 2.1   # two quantisation legs
@@ -50,9 +55,9 @@ def g(x_local):
     out = sync_grads({"w": x_local}, axes=("data",), mode="fused",
                      compress="bf16")
     return out["w"]
-sg = jax.jit(jax.shard_map(g, mesh=mesh, in_specs=P("data"),
-                           out_specs=P(), axis_names={"data"},
-                           check_vma=False))
+sg = jax.jit(shard_map(g, mesh=mesh, in_specs=P("data"),
+                       out_specs=P(), axis_names={"data"},
+                       check_vma=False))
 got_bf = np.asarray(sg(xs.reshape(-1)))
 assert np.max(np.abs(got_bf - exact)) < 0.05
 assert "bf16[" in sg.lower(xs.reshape(-1)).compile().as_text()

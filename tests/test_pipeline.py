@@ -4,6 +4,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow
+
 _ENV = dict(os.environ,
             XLA_FLAGS="--xla_force_host_platform_device_count=4",
             PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -15,6 +15,13 @@ Invariants checked:
 
 import threading
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+
 from hypothesis import given, settings, HealthCheck
 import hypothesis.strategies as st
 

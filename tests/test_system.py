@@ -26,6 +26,8 @@ from repro.runtime.sharding import ShardingPolicy
 from repro.launch.mesh import local_mesh
 from repro.core import TaskRuntime
 
+pytestmark = pytest.mark.system
+
 
 def _tiny_cfg():
     return configs.smoke("granite_3_2b").scaled(

@@ -2,49 +2,82 @@
 
 Five versions of the blocked Gauss–Seidel iteration, mirroring the paper:
 
-* ``pure``            — sequential compute per rank, ordered boundary
-                        exchange (Pure MPI).
+* ``pure``            — sequential compute per rank, sequential halo
+                        exchange between iterations (Pure MPI).
 * ``forkjoin``        — parallel compute tasks; sequential communication
                         phase in the main thread; a taskwait barrier per
                         iteration.
 * ``sentinel``        — taskified communication serialised by an artificial
                         sentinel dependency (what you must write WITHOUT
-                        TASK_MULTIPLE, §6.3).  Note the ordering
-                        constraint: sends are chained before receives or
-                        the chain itself deadlocks — exactly the paper's
-                        point about blocking calls in tasks (§5).
-* ``interop-blk``     — TAMPI blocking mode: comm tasks use task-aware
-                        waits (pause/resume); no artificial dependencies.
-* ``interop-nonblk``  — TAMPI non-blocking mode: comm tasks bind receives
-                        to their event counter (TAMPI_Iwait) and finish
-                        immediately.
+                        TASK_MULTIPLE, §6.3): one chained task drives each
+                        whole halo round and the residual collective.
+* ``interop-blk``     — TAMPI blocking mode: per-rank halo tasks use
+                        task-aware waits (pause/resume); no artificial
+                        dependencies.
+* ``interop-nonblk``  — TAMPI non-blocking mode: per-rank halo tasks bind
+                        the exchange to their event counter and finish
+                        immediately; boundary compute declares dependencies.
+
+Communication structure (since the sub-communicator PR): ranks form a 2-D
+Cartesian grid (``CommWorld.cart_create``) and each rank owns a tile of
+``nby × nbx`` blocks.  The per-block point-to-point wiring of the previous
+revision is replaced by ONE :class:`~repro.core.collectives.HaloExchange`
+round per rank per iteration — boundary rows/columns travel as single
+per-neighbour messages.  Cross-rank coupling therefore uses iteration
+``t-1`` data in every version (the classic halo-exchange hybrid:
+Gauss–Seidel wavefront *inside* a rank, Jacobi coupling *across* ranks),
+which is what makes the whole exchange postable at once.  The per-iteration
+global residual runs through the hierarchical allreduce
+(:class:`~repro.core.collectives.HierarchicalCollectives` — intra-row
+chain + inter-leader doubling over two nested groups built by
+``CommWorld.split``).
 
 Measurements: (a) REAL execution on the host task runtime at small scale
 (all versions must agree numerically); (b) deterministic makespans of the
 same task DAGs under the paper's machine model (core/simulate.py) — the
-scaling curves.  CSV schema: name,us_per_call,derived
-
-Each iteration additionally computes the global residual through the
-task-aware collectives API (core/collectives.py): a scalar ``allreduce``
-per iteration, executed per version as a sequential group call (pure /
-fork-join), a serialized group inside the sentinel chain, a task-aware
-blocking allreduce (interop-blk), or an event-bound allreduce
-(interop-nonblk).  The simulator models it as a collective node group.
+scaling curves.  Halo rounds appear in the simulated graphs as
+neighbourhood nodes (``SimTask(neighbors=...)``).  CSV schema:
+name,us_per_call,derived
 """
 
 from __future__ import annotations
 
+import math
 import time
 from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import Collectives, TaskRuntime, tac
-from repro.core.collectives import n_rounds
+from repro.core import (HaloExchange, HierarchicalCollectives,
+                        TaskRuntime, tac)
 from repro.core.simulate import (Simulator, SimTask, COMPUTE, COMM_HELD,
                                  COMM_PAUSED, COMM_EVENTS)
 
 VERSIONS = ("pure", "forkjoin", "sentinel", "interop-blk", "interop-nonblk")
+
+
+def grid_dims(n_ranks: int) -> Tuple[int, int]:
+    """Most-square 2-D factorization of ``n_ranks`` (py >= px)."""
+    for d in range(int(math.isqrt(n_ranks)), 0, -1):
+        if n_ranks % d == 0:
+            return (n_ranks // d, d)
+    return (n_ranks, 1)
+
+
+def edge_blocks(cart, nby, nbx, r, d):
+    """Block coordinates of rank ``r``'s tile edge facing direction ``d``.
+
+    The single source of boundary geometry shared by the real execution
+    (halo payloads, task deps) and the simulated graph — an edit here
+    changes both sides together.
+    """
+    ry, rx = cart.coords(r)
+    dim, disp = d
+    if dim == 0:
+        gy = ry * nby if disp < 0 else (ry + 1) * nby - 1
+        return [(gy, rx * nbx + j) for j in range(nbx)]
+    gx = rx * nbx if disp < 0 else (rx + 1) * nbx - 1
+    return [(ry * nby + i, gx) for i in range(nby)]
 
 
 def gs_block(block, top, left, bottom, right):
@@ -60,225 +93,237 @@ def gs_block(block, top, left, bottom, right):
 # ---------------------------------------------------------------------------
 # real execution on the host runtime
 # ---------------------------------------------------------------------------
-def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
-             nby: int = 2, nbx: int = 4, bs: int = 32, iters: int = 3,
+def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
+             nby: int = 2, nbx: int = 2, bs: int = 16, iters: int = 3,
              seed: int = 0):
     """Returns (final grid, stats).
 
-    Dataflow: grids[it][gy][bx]; block (gy,bx) at iteration it reads
-    up/left from iteration it (spatial wavefront) and self/down/right from
-    it-1 (temporal wavefront) — the paper's Fig. 7 pattern.  Cross-rank
-    halos travel through a tac.CommWorld.
+    Dataflow: grids[it][gy][gx]; block (gy,gx) at iteration it reads
+    up/left from iteration it when the neighbour block is on the SAME
+    rank (spatial wavefront) and self/down/right from it-1; every
+    cross-rank side reads the neighbour rank's it-1 boundary, delivered
+    by that iteration's halo exchange.
     """
+    py, px = grid_dims(n_ranks)
+    NYb, NXb = py * nby, px * nbx
     rng = np.random.default_rng(seed)
-    NY = n_ranks * nby
     grids: Dict[int, list] = {
-        0: [[rng.standard_normal((bs, bs)) for _ in range(nbx)]
-            for _ in range(NY)]}
+        0: [[rng.standard_normal((bs, bs)) for _ in range(NXb)]
+            for _ in range(NYb)]}
     for it in range(1, iters + 1):
-        grids[it] = [[None] * nbx for _ in range(NY)]
-    halos: Dict = {}
+        grids[it] = [[None] * NXb for _ in range(NYb)]
     zeros = np.zeros(bs)
+
     world = tac.CommWorld(n_ranks)
-    coll = Collectives(world)
+    cart = world.cart_create((py, px))
+    hx = HaloExchange(cart)
+    hier = HierarchicalCollectives(world, px)   # intra-row + leader column
+    halos: Dict = {}       # (rank, it) -> {direction: edge} | handle
     residuals: Dict = {}   # (rank, it) -> float | CollectiveHandle
     tac.init(tac.TASK_MULTIPLE if version.startswith("interop")
              else tac.THREAD_MULTIPLE)
     rt = TaskRuntime(num_workers=workers)
     rt.start()
 
-    def compute_block(gy, bx, it):
-        g_cur, g_prev = grids[it], grids[it - 1]
-        r = gy // nby
-        top = halos.get(("top", gy, bx, it))
-        if isinstance(top, tac.AsyncHandle):
-            top = top.result
-        if top is None:
-            top = g_cur[gy - 1][bx][-1] if gy > 0 else zeros
-        bottom = halos.get(("bot", gy, bx, it))
-        if isinstance(bottom, tac.AsyncHandle):
-            bottom = bottom.result
-        if bottom is None:
-            bottom = g_prev[gy + 1][bx][0] if gy < NY - 1 else zeros
-        left = g_cur[gy][bx - 1][:, -1] if bx > 0 else zeros
-        right = g_prev[gy][bx + 1][:, 0] if bx < nbx - 1 else zeros
-        grids[it][gy][bx] = gs_block(g_prev[gy][bx], top, left, bottom,
-                                     right)
+    def rank_of(gy, gx):
+        return cart.rank_at((gy // nby, gx // nbx))
 
-    def comm_pairs(it):
-        """(kind, src_rank, dst_rank, gy_src, gy_dst, bx) for iteration it.
-
-        'up' halo: rank r's top-row compute at `it` needs neighbour
-        (r-1)'s bottom row of iteration `it` (spatial wavefront) — sent as
-        soon as that block is computed.  'down' halo: needs neighbour
-        (r+1)'s top row of `it-1`.
-        """
-        out = []
-        for r in range(n_ranks):
-            for bx in range(nbx):
-                if r > 0:
-                    out.append(("dn", r - 1, r, r * nby - 1, r * nby, bx,
-                                it))       # their bottom@it -> my top halo
-                if r < n_ranks - 1:
-                    out.append(("up", r + 1, r, (r + 1) * nby,
-                                r * nby + nby - 1, bx, it))  # top@it-1
+    def halo_sends(r, it):
+        """Outgoing it-1 boundary edges, one concatenated array per
+        neighbour direction."""
+        out = {}
+        for d, _ in hx.neighbors(r):
+            dim, disp = d
+            edge = 0 if disp < 0 else -1
+            out[d] = np.concatenate(
+                [grids[it - 1][gy][gx][edge, :].copy() if dim == 0
+                 else grids[it - 1][gy][gx][:, edge].copy()
+                 for gy, gx in edge_blocks(cart, nby, nbx, r, d)])
         return out
 
-    def make_recv(kind, src, dst, gy_dst, bx, it):
-        hkey = ("top", gy_dst, bx, it) if kind == "dn" else \
-            ("bot", gy_dst, bx, it)
+    def boundary_blocks(r):
+        """Block coordinates whose it-1 data feeds r's outgoing halos."""
+        keys = set()
+        for d, _ in hx.neighbors(r):
+            keys.update(edge_blocks(cart, nby, nbx, r, d))
+        return sorted(keys)
 
-        def recv():
-            h = world.irecv(src=src, dst=dst, tag=(kind, bx, it))
-            if version == "interop-nonblk":
-                tac.iwait(h)
-                halos[hkey] = h     # resolved by release time
+    def halo_edge(r, it, d, offset):
+        h = halos[(r, it)]
+        if isinstance(h, tac.AsyncHandle):
+            h = h.result
+        return h[d][offset * bs:(offset + 1) * bs]
+
+    def compute_block(gy, gx, it):
+        r = rank_of(gy, gx)
+        ry, rx = gy // nby, gx // nbx
+        g_cur, g_prev = grids[it], grids[it - 1]
+        if gy == 0:
+            top = zeros
+        elif gy % nby == 0:
+            top = halo_edge(r, it, (0, -1), gx - rx * nbx)
+        else:
+            top = g_cur[gy - 1][gx][-1, :]
+        if gx == 0:
+            left = zeros
+        elif gx % nbx == 0:
+            left = halo_edge(r, it, (1, -1), gy - ry * nby)
+        else:
+            left = g_cur[gy][gx - 1][:, -1]
+        if gy == NYb - 1:
+            bottom = zeros
+        elif (gy + 1) % nby == 0:
+            bottom = halo_edge(r, it, (0, 1), gx - rx * nbx)
+        else:
+            bottom = g_prev[gy + 1][gx][0, :]
+        if gx == NXb - 1:
+            right = zeros
+        elif (gx + 1) % nbx == 0:
+            right = halo_edge(r, it, (1, 1), gy - ry * nby)
+        else:
+            right = g_prev[gy][gx + 1][:, 0]
+        grids[it][gy][gx] = gs_block(g_prev[gy][gx], top, left, bottom,
+                                     right)
+
+    def block_deps(gy, gx, it):
+        """Region deps for the compute task (task versions only)."""
+        r = rank_of(gy, gx)
+        deps = [("blk", gy, gx, it - 1)]
+        crosses = False
+        if gy > 0:
+            if gy % nby:
+                deps.append(("blk", gy - 1, gx, it))
             else:
-                halos[hkey] = tac.wait(h)
-        return recv, hkey
+                crosses = True
+        if gx > 0:
+            if gx % nbx:
+                deps.append(("blk", gy, gx - 1, it))
+            else:
+                crosses = True
+        if gy < NYb - 1:
+            if (gy + 1) % nby:
+                deps.append(("blk", gy + 1, gx, it - 1))
+            else:
+                crosses = True
+        if gx < NXb - 1:
+            if (gx + 1) % nbx:
+                deps.append(("blk", gy, gx + 1, it - 1))
+            else:
+                crosses = True
+        if crosses:
+            deps.append(("halo", r, it))
+        return deps
+
+    def local_residual(r, it):
+        ry, rx = cart.coords(r)
+        tot = 0.0
+        for gy in range(ry * nby, (ry + 1) * nby):
+            for gx in range(rx * nbx, (rx + 1) * nbx):
+                tot += float(np.abs(grids[it][gy][gx]
+                                    - grids[it - 1][gy][gx]).sum())
+        return np.float64(tot)
 
     for it in range(1, iters + 1):
-        pairs = comm_pairs(it)
+        # ---- halo phase --------------------------------------------------
         if version in ("pure", "forkjoin"):
             if version == "forkjoin":
                 rt.taskwait()   # barrier: previous iteration fully done
-            # sequential communication phase in the main thread
-            for kind, src, dst, gy_src, gy_dst, bx, _ in pairs:
-                if kind == "up":  # prev-iteration data: available now
-                    world.isend(grids[it - 1][gy_src][bx][0].copy(),
-                                src=src, dst=dst, tag=(kind, bx, it))
-                    h = world.irecv(src=src, dst=dst, tag=(kind, bx, it))
-                    halos[("bot", gy_dst, bx, it)] = h.result
-            # 'dn' halos for pure/forkjoin: computed this iteration —
-            # resolved by direct grid access below (single address space),
-            # matching the sequential-communication semantics.
+            got = hx.run_group([halo_sends(r, it) for r in range(n_ranks)],
+                               key=("h", it))
+            for r in range(n_ranks):
+                halos[(r, it)] = got[r]
+        elif version == "sentinel":
+            # Without TASK_MULTIPLE a blocking halo round inside per-rank
+            # tasks would deadlock (§5) — the whole neighbourhood
+            # collective is serialised into the sentinel chain instead.
+            def halo_group(it2=it):
+                got = hx.run_group(
+                    [halo_sends(r, it2) for r in range(n_ranks)],
+                    key=("h", it2))
+                for r in range(n_ranks):
+                    halos[(r, it2)] = got[r]
+            rt.submit(halo_group,
+                      in_=[("blk", gy, gx, it - 1)
+                           for r in range(n_ranks)
+                           for gy, gx in boundary_blocks(r)],
+                      out=[("halo", r, it) for r in range(n_ranks)],
+                      inout=[("comm-sentinel",)], label="comm",
+                      name=f"halo@{it}")
         else:
-            sentinel = [("comm-sentinel",)] if version == "sentinel" else []
+            mode = "event" if version == "interop-nonblk" else "blocking"
 
-            def submit_pair(kind, src, dst, gy_src, gy_dst, bx):
-                def send(kind=kind, src=src, dst=dst, gy_src=gy_src, bx=bx,
-                         it=it):
-                    src_it = it if kind == "dn" else it - 1
-                    row = grids[src_it][gy_src][bx][-1 if kind == "dn"
-                                                    else 0]
-                    world.isend(row.copy(), src=src, dst=dst,
-                                tag=(kind, bx, it))
-                rt.submit(send, in_=[("blk", gy_src, bx,
-                                      it if kind == "dn" else it - 1)],
-                          inout=list(sentinel), label="comm",
-                          name=f"s{kind}[{gy_src},{bx}]@{it}")
-                recv, hkey = make_recv(kind, src, dst, gy_dst, bx, it)
-                rt.submit(recv, out=[hkey], inout=list(sentinel),
-                          label="comm", name=f"r{kind}[{gy_dst},{bx}]@{it}")
+            def halo_task(r, it2=it, mode=mode):
+                def body():
+                    halos[(r, it2)] = hx.start(halo_sends(r, it2), rank=r,
+                                               mode=mode, key=("h", it2))
+                return body
+            for r in range(n_ranks):
+                rt.submit(halo_task(r),
+                          in_=[("blk", gy, gx, it - 1)
+                               for gy, gx in boundary_blocks(r)],
+                          out=[("halo", r, it)], label="comm",
+                          name=f"halo[{r}]@{it}")
 
-            # 'up' halos carry it-1 data — submit their pairs up front.
-            # 'dn' halos carry same-iteration data: their send must be
-            # submitted AFTER the compute that writes the row (submission
-            # order defines data versions), interleaved below.
-            for kind, src, dst, gy_src, gy_dst, bx, _ in pairs:
-                if kind == "up":
-                    submit_pair(kind, src, dst, gy_src, gy_dst, bx)
-
-        dn_by_src = {}
-        for p in pairs:
-            if p[0] == "dn":
-                dn_by_src.setdefault((p[3], p[5]), p)  # (gy_src, bx)
-
-        for gy in range(NY):
-            r = gy // nby
-            for bx in range(nbx):
-                deps = [("blk", gy, bx, it - 1)]
-                if bx > 0:
-                    deps.append(("blk", gy, bx - 1, it))
-                if bx < nbx - 1:
-                    deps.append(("blk", gy, bx + 1, it - 1))
-                if gy > 0:
-                    if (gy - 1) // nby == r or version in ("pure",
-                                                           "forkjoin"):
-                        deps.append(("blk", gy - 1, bx, it))
-                    else:
-                        deps.append(("top", gy, bx, it))
-                if gy < NY - 1:
-                    if (gy + 1) // nby == r or version in ("pure",
-                                                           "forkjoin"):
-                        deps.append(("blk", gy + 1, bx, it - 1))
-                    else:
-                        deps.append(("bot", gy, bx, it))
+        # ---- compute phase (intra-rank wavefront) ------------------------
+        for gy in range(NYb):
+            for gx in range(NXb):
                 if version == "pure":
-                    compute_block(gy, bx, it)
+                    compute_block(gy, gx, it)
                 else:
-                    rt.submit(compute_block, gy, bx, it,
-                              out=[("blk", gy, bx, it)], in_=deps,
-                              label="compute", name=f"c[{gy},{bx}]@{it}")
-                    # boundary row produced -> launch its 'dn' exchange now
-                    p = dn_by_src.get((gy, bx))
-                    if p is not None and version not in ("pure",
-                                                         "forkjoin"):
-                        kind, src, dst, gy_src, gy_dst, bx2, _ = p
-                        submit_pair(kind, src, dst, gy_src, gy_dst, bx2)
+                    rt.submit(compute_block, gy, gx, it,
+                              out=[("blk", gy, gx, it)],
+                              in_=block_deps(gy, gx, it),
+                              label="compute", name=f"c[{gy},{gx}]@{it}")
 
-        # -- global residual: one allreduce per iteration (collectives) --
-        def local_residual(r2, it2):
-            tot = 0.0
-            for gy2 in range(r2 * nby, (r2 + 1) * nby):
-                for bx2 in range(nbx):
-                    tot += float(np.abs(grids[it2][gy2][bx2]
-                                        - grids[it2 - 1][gy2][bx2]).sum())
-            return np.float64(tot)
-
+        # ---- global residual: hierarchical allreduce ---------------------
         if version in ("pure", "forkjoin"):
             if version == "forkjoin":
                 rt.taskwait()       # fork-join: iteration fully done
-            vals = coll.run_group(
-                "allreduce",
-                [{"value": local_residual(r2, it)}
-                 for r2 in range(n_ranks)],
-                op="sum", algorithm="doubling", key=("res", it))
-            for r2 in range(n_ranks):
-                residuals[(r2, it)] = float(vals[r2])
+            vals = hier.run_group(
+                [local_residual(r, it) for r in range(n_ranks)],
+                op="sum", key=("res", it))
+            for r in range(n_ranks):
+                residuals[(r, it)] = float(vals[r])
         elif version == "sentinel":
-            # Without TASK_MULTIPLE the collective must be serialised into
-            # the comm chain — one task drives the whole group.
             def res_group(it2=it):
-                vals = coll.run_group(
-                    "allreduce",
-                    [{"value": local_residual(r2, it2)}
-                     for r2 in range(n_ranks)],
-                    op="sum", algorithm="doubling", key=("res", it2))
-                for r2 in range(n_ranks):
-                    residuals[(r2, it2)] = float(vals[r2])
+                vals = hier.run_group(
+                    [local_residual(r, it2) for r in range(n_ranks)],
+                    op="sum", key=("res", it2))
+                for r in range(n_ranks):
+                    residuals[(r, it2)] = float(vals[r])
             rt.submit(res_group,
-                      in_=[("blk", gy2, bx2, it) for gy2 in range(NY)
-                           for bx2 in range(nbx)],
+                      in_=[("blk", gy, gx, it) for gy in range(NYb)
+                           for gx in range(NXb)],
                       inout=[("comm-sentinel",)], label="comm",
                       name=f"res@{it}")
         else:
-            for r2 in range(n_ranks):
-                def res_task(r2=r2, it2=it):
-                    v = local_residual(r2, it2)
+            for r in range(n_ranks):
+                def res_task(r=r, it2=it):
+                    v = local_residual(r, it2)
                     if version == "interop-nonblk":
-                        residuals[(r2, it2)] = coll.allreduce(
-                            v, rank=r2, op="sum", algorithm="doubling",
-                            mode="event", key=("res", it2))
+                        residuals[(r, it2)] = hier.allreduce(
+                            v, rank=r, op="sum", mode="event",
+                            key=("res", it2))
                     else:
-                        residuals[(r2, it2)] = float(coll.allreduce(
-                            v, rank=r2, op="sum", algorithm="doubling",
-                            mode="blocking", key=("res", it2)))
+                        residuals[(r, it2)] = float(hier.allreduce(
+                            v, rank=r, op="sum", mode="blocking",
+                            key=("res", it2)))
+                ry, rx = cart.coords(r)
                 rt.submit(res_task,
-                          in_=[("blk", gy2, bx2, it)
-                               for gy2 in range(r2 * nby, (r2 + 1) * nby)
-                               for bx2 in range(nbx)],
-                          label="comm", name=f"res[{r2}]@{it}")
+                          in_=[("blk", gy, gx, it)
+                               for gy in range(ry * nby, (ry + 1) * nby)
+                               for gx in range(rx * nbx, (rx + 1) * nbx)],
+                          label="comm", name=f"res[{r}]@{it}")
 
     rt.taskwait()
     stats = dict(rt.stats)
     # Resolve event-bound handles and check every rank saw the same value.
     res_by_it: Dict[int, float] = {}
-    for (r2, it2), v in sorted(residuals.items()):
+    for (r, it), v in sorted(residuals.items()):
         if isinstance(v, tac.AsyncHandle):
             v = float(v.result)
-        prev = res_by_it.setdefault(it2, v)
-        assert abs(prev - v) < 1e-9, ("residual disagreement", it2, prev, v)
+        prev = res_by_it.setdefault(it, v)
+        assert abs(prev - v) < 1e-9, ("residual disagreement", it, prev, v)
     stats["residuals"] = res_by_it
     rt.close()
     return np.block(grids[iters]), stats
@@ -289,6 +334,10 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
 # ---------------------------------------------------------------------------
 def build_sim_graph(version, *, n_ranks, nby, nbx, iters,
                     t_block=1.0, t_comm=0.05, latency=0.1):
+    py, px = grid_dims(n_ranks)
+    world = tac.CommWorld(n_ranks)
+    cart = world.cart_create((py, px))
+    NYb, NXb = py * nby, px * nbx
     tasks: List[SimTask] = []
     index: Dict[str, int] = {}
 
@@ -303,91 +352,108 @@ def build_sim_graph(version, *, n_ranks, nby, nbx, iters,
         tasks.append(t)
         index[name] = t.id
 
+    def rank_of(gy, gx):
+        return cart.rank_at((gy // nby, gx // nbx))
+
     comm_kind = {"sentinel": COMM_HELD, "interop-blk": COMM_PAUSED,
                  "interop-nonblk": COMM_EVENTS}.get(version, COMM_HELD)
-    NY = n_ranks * nby
+    # hierarchical residual latency: the same critical-path model the
+    # real execution runs (intra-row chain + leader doubling)
+    res_lat = HierarchicalCollectives(world, px).n_rounds() * latency
     last_comm = [None] * n_ranks
 
-    for it in range(iters):
-        if version not in ("pure", "forkjoin"):
-            # sends (chained for sentinel), then receives
-            sends, recvs = [], []
-            for r in range(n_ranks):
-                for bx in range(nbx):
-                    if r > 0:
-                        gy = r * nby
-                        sends.append((r - 1, f"c[{gy - 1},{bx}]@{it}",
-                                      f"sd[{gy - 1},{bx}]@{it}"))
-                        recvs.append((r, f"sd[{gy - 1},{bx}]@{it}",
-                                      f"rt[{gy},{bx}]@{it}"))
-                    if r < n_ranks - 1:
-                        gy = r * nby + nby - 1
-                        sends.append((r + 1,
-                                      f"c[{gy + 1},{bx}]@{it - 1}" if it
-                                      else "", f"su[{gy + 1},{bx}]@{it}"))
-                        recvs.append((r, f"su[{gy + 1},{bx}]@{it}",
-                                      f"rb[{gy},{bx}]@{it}"))
-            for rank, dep, name in sends:
-                chain = last_comm[rank] if version == "sentinel" else None
-                add(rank, t_comm, kind=COMPUTE,   # send is buffered: cheap
-                    start=[dep, chain or ""], name=name)
-                if version == "sentinel":
-                    last_comm[rank] = name
-            for rank, ev, name in recvs:
-                chain = last_comm[rank] if version == "sentinel" else None
-                add(rank, t_comm, kind=comm_kind, start=[chain or ""],
-                    events=[ev], name=name)
-                if version == "sentinel":
-                    last_comm[rank] = name
+    def boundary_names(r, it):
+        keys = set()
+        for d, _ in cart.neighbor_dirs(r):
+            keys.update(edge_blocks(cart, nby, nbx, r, d))
+        return [f"c[{gy},{gx}]@{it}" for gy, gx in sorted(keys)]
 
+    for it in range(iters):
+        # one neighbourhood-collective node per rank per iteration; the
+        # version decides how tightly it is gated:
+        #   pure      — after the rank's ENTIRE previous iteration (comm
+        #               phase follows compute phase, one flow per rank)
+        #   forkjoin  — after the global barrier (main-thread comm phase)
+        #   sentinel  — chained on the rank's previous comm task
+        #   interop-* — only after the boundary blocks it actually ships
         for r in range(n_ranks):
-            for ly in range(nby):
-                gy = r * nby + ly
-                for bx in range(nbx):
-                    deps = []
-                    if it:
-                        deps.append(f"c[{gy},{bx}]@{it - 1}")
-                        if version == "forkjoin":
-                            deps.append(f"barrier@{it - 1}")
-                        if bx + 1 < nbx:
-                            deps.append(f"c[{gy},{bx + 1}]@{it - 1}")
-                        if gy + 1 < NY:
-                            if (gy + 1) // nby == r or version in (
-                                    "pure", "forkjoin"):
-                                deps.append(f"c[{gy + 1},{bx}]@{it - 1}")
-                            else:
-                                deps.append(f"rb[{gy},{bx}]@{it}")
-                    if bx > 0:
-                        deps.append(f"c[{gy},{bx - 1}]@{it}")
-                    if gy > 0:
-                        if (gy - 1) // nby == r:
-                            deps.append(f"c[{gy - 1},{bx}]@{it}")
-                        elif version in ("pure", "forkjoin"):
-                            # sequential whole-boundary exchange: rank r
-                            # waits for rank r-1's ENTIRE iteration (the
-                            # Fig. 10a cascade)
-                            deps.extend(f"c[{gy - 1},{b2}]@{it}"
-                                        for b2 in range(nbx))
-                        else:
-                            deps.append(f"rt[{gy},{bx}]@{it}")
-                    add(r, t_block, start=deps, name=f"c[{gy},{bx}]@{it}")
+            if not it:
+                start = []
+            elif version == "pure":
+                ry, rx = cart.coords(r)
+                start = [f"c[{gy},{gx}]@{it - 1}"
+                         for gy in range(ry * nby, (ry + 1) * nby)
+                         for gx in range(rx * nbx, (rx + 1) * nbx)]
+            elif version == "forkjoin":
+                start = [f"barrier@{it - 1}"]
+            else:
+                start = boundary_names(r, it - 1)
+            if version == "sentinel":
+                start = start + [last_comm[r] or ""]
+            add(r, t_comm, kind=comm_kind, start=start,
+                name=f"h[{r}]@{it}")
+            if version == "sentinel":
+                last_comm[r] = f"h[{r}]@{it}"
+        for r in range(n_ranks):
+            tasks[index[f"h[{r}]@{it}"]].neighbors = [
+                (index[f"h[{nbr}]@{it}"], latency)
+                for nbr in cart.neighbors(r)]
+
+        for gy in range(NYb):
+            for gx in range(NXb):
+                r = rank_of(gy, gx)
+                deps = []
+                crosses = False
+                if it:
+                    deps.append(f"c[{gy},{gx}]@{it - 1}")
+                    if version == "forkjoin":
+                        deps.append(f"barrier@{it - 1}")
+                if gy > 0:
+                    if gy % nby:
+                        deps.append(f"c[{gy - 1},{gx}]@{it}")
+                    else:
+                        crosses = True
+                if gx > 0:
+                    if gx % nbx:
+                        deps.append(f"c[{gy},{gx - 1}]@{it}")
+                    else:
+                        crosses = True
+                if gy < NYb - 1:
+                    if (gy + 1) % nby:
+                        deps.append(f"c[{gy + 1},{gx}]@{it - 1}")
+                    else:
+                        crosses = True
+                if gx < NXb - 1:
+                    if (gx + 1) % nbx:
+                        deps.append(f"c[{gy},{gx + 1}]@{it - 1}")
+                    else:
+                        crosses = True
+                if crosses:
+                    # it == 0 still crosses: the first round ships the
+                    # initial boundary data (it reads nothing, so the
+                    # filtered @-1 deps leave it immediately ready)
+                    deps.append(f"h[{r}]@{it}")
+                add(r, t_block, start=deps, name=f"c[{gy},{gx}]@{it}")
 
         if version == "forkjoin":
-            for r2 in range(n_ranks):
-                add(r2, 0.0,
-                    start=[f"c[{r2 * nby + ly},{bx}]@{it}"
-                           for ly in range(nby) for bx in range(nbx)],
-                    name=f"b[{r2}]@{it}")
-            add(0, 0.0, start=[f"b[{r2}]@{it}" for r2 in range(n_ranks)],
+            for r in range(n_ranks):
+                ry, rx = cart.coords(r)
+                add(r, 0.0,
+                    start=[f"c[{gy},{gx}]@{it}"
+                           for gy in range(ry * nby, (ry + 1) * nby)
+                           for gx in range(rx * nbx, (rx + 1) * nbx)],
+                    name=f"b[{r}]@{it}")
+            add(0, 0.0, start=[f"b[{r}]@{it}" for r in range(n_ranks)],
                 name=f"barrier@{it}")
 
         # residual allreduce: one collective node per rank per iteration
         res_kind = {"interop-blk": COMM_PAUSED,
                     "interop-nonblk": COMM_EVENTS}.get(version, COMM_HELD)
-        res_lat = n_rounds("allreduce", "doubling", n_ranks) * latency
         for r in range(n_ranks):
-            deps = [f"c[{r * nby + ly},{bx}]@{it}"
-                    for ly in range(nby) for bx in range(nbx)]
+            ry, rx = cart.coords(r)
+            deps = [f"c[{gy},{gx}]@{it}"
+                    for gy in range(ry * nby, (ry + 1) * nby)
+                    for gx in range(rx * nbx, (rx + 1) * nbx)]
             if version == "forkjoin":
                 deps.append(f"barrier@{it}")
             if version == "sentinel":
@@ -430,27 +496,28 @@ def bench(print_fn=print):
                      f"blocks={stats.get('task_blocks', 0)}"
                      f";threads={stats.get('threads_spawned', 0)}"))
 
-    # strong scaling (Fig. 9): fixed 32 block-rows total, split over ranks
-    base_s = simulate_version("pure", n_ranks=1, nby=32)
+    # strong scaling (Fig. 9): fixed 8x8 global blocks, split over ranks
+    base_s = simulate_version("pure", n_ranks=1, nby=8, nbx=8)
     for v in VERSIONS:
         for n in (1, 2, 4, 8, 16):
-            mk = simulate_version(v, n_ranks=n, nby=32 // n)
+            py, px = grid_dims(n)
+            mk = simulate_version(v, n_ranks=n, nby=8 // py, nbx=8 // px)
             rows.append((f"gs_strong_{v}_r{n}", mk * 1e6,
                          f"speedup={base_s / mk:.2f}"))
 
-    # weak scaling (Fig. 11): 4 block-rows per rank
-    base_w = simulate_version("pure", n_ranks=1)
+    # weak scaling (Fig. 11): 4x4 blocks per rank
+    base_w = simulate_version("pure", n_ranks=1, nby=4, nbx=4)
     for v in VERSIONS:
         for n in (1, 2, 4, 8, 16):
-            mk = simulate_version(v, n_ranks=n)
+            mk = simulate_version(v, n_ranks=n, nby=4, nbx=4)
             rows.append((f"gs_weak_{v}_r{n}", mk * 1e6,
                          f"efficiency={base_w / mk:.2f}"))
 
-    base6 = simulate_version("pure", n_ranks=1, iters=6)
+    base6 = simulate_version("pure", n_ranks=1, nby=4, nbx=4, iters=6)
     for v in ("interop-blk", "interop-nonblk"):
         for scale, label in ((1, "1024bs"), (2, "512bs"), (4, "256bs")):
             mk = simulate_version(v, n_ranks=8, nby=4 * scale,
-                                  nbx=16 * scale, iters=6,
+                                  nbx=4 * scale, iters=6,
                                   t_block=1.0 / (scale * scale))
             rows.append((f"gs_gran_{v}_{label}", mk * 1e6,
                          f"speedup={base6 / mk:.2f}"))

@@ -15,11 +15,13 @@ import time
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-from benchmarks.gauss_seidel import run_real, simulate_version, VERSIONS
+from benchmarks.gauss_seidel import (grid_dims, run_real, simulate_version,
+                                     VERSIONS)
 
 
 def main():
-    print("real execution (2 logical ranks x 2 workers, 8x4 blocks):")
+    print("real execution (2x2 Cartesian rank grid x 2 workers, "
+          "halo exchange per iteration):")
     ref, _ = run_real("pure")
     for v in VERSIONS:
         t0 = time.monotonic()
@@ -34,10 +36,13 @@ def main():
 
     print("\nsimulated speedup vs Pure-MPI@1rank "
           "(48 workers/rank, paper Fig. 9 analogue):")
-    base = simulate_version("pure", n_ranks=1, nby=32)
+    base = simulate_version("pure", n_ranks=1, nby=8, nbx=8)
     for v in VERSIONS:
-        sp = [base / simulate_version(v, n_ranks=n, nby=32 // n)
-              for n in (1, 4, 16)]
+        sp = []
+        for n in (1, 4, 16):
+            py, px = grid_dims(n)
+            sp.append(base / simulate_version(v, n_ranks=n, nby=8 // py,
+                                              nbx=8 // px))
         print(f"  {v:16s} r1={sp[0]:5.2f}  r4={sp[1]:5.2f} r16={sp[2]:5.2f}")
     print("\nThe Interop versions scale because communication tasks carry "
           "no artificial dependencies\n(blocking mode pauses tasks; "

@@ -16,7 +16,9 @@ from .executor import TaskRuntime, TaskError
 from . import tac
 from . import simulate
 from . import collectives
-from .collectives import Collectives, CollectiveHandle
+from .collectives import (Collectives, CollectiveHandle, HaloExchange,
+                          HierarchicalCollectives)
+from .tac import CommWorld, CommGroup, CartGroup
 
 __all__ = [
     # pause/resume API (§4.1)
@@ -31,4 +33,7 @@ __all__ = [
     "EventCounter", "current_task",
     # TAMPI analogue + task-aware collectives
     "tac", "simulate", "collectives", "Collectives", "CollectiveHandle",
+    # sub-communicators + neighbourhood collectives
+    "CommWorld", "CommGroup", "CartGroup", "HaloExchange",
+    "HierarchicalCollectives",
 ]

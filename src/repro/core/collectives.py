@@ -9,9 +9,14 @@ progress/notification engine instead of per-call blocking.  This module
 implements that design for the host runtime:
 
 * Every collective is expressed as a *schedule of point-to-point rounds*
-  over :class:`~repro.core.tac.CommWorld` — a Python generator that posts
-  ``isend``s and yields the ``irecv`` handles it needs completed before the
-  next round.  Two algorithm families are provided per collective:
+  over a communicator — a :class:`~repro.core.tac.CommWorld` or any
+  :class:`~repro.core.tac.CommGroup` sub-communicator (``world.group``,
+  the collective ``world.split``, Cartesian ``world.cart_create``); a
+  group's namespaced tag context keeps concurrent collectives on
+  disjoint groups, or on a group and its parent, isolated.  A schedule
+  is a Python generator that posts ``isend``s and yields the ``irecv``
+  handles it needs completed before the next round.  Two algorithm
+  families are provided per collective:
 
   - ``ring``      — neighbour rounds (ring/chain/pairwise): ``n-1`` steps,
                     bandwidth-optimal for large payloads.
@@ -49,6 +54,13 @@ in matching order, so every rank finishes with a bitwise-identical result
 either through the per-rank call sequence (MPI's "same order on every
 rank" rule) or an explicit ``key`` for programs whose task schedulers may
 reorder independent collectives.
+
+Beyond the seven world-wide collectives this module provides the
+*neighbourhood* layer over Cartesian groups —
+:meth:`Collectives.neighbor_alltoall` and the persistent
+:class:`HaloExchange` — and :class:`HierarchicalCollectives`, an
+allreduce over two nested sub-groups.  All families share the same
+schedule machinery, progress engine and interoperability modes.
 """
 
 from __future__ import annotations
@@ -66,6 +78,7 @@ from .events import (current_task, get_current_event_counter,
                      decrease_task_event_counter)
 
 __all__ = ["Collectives", "CollectiveHandle", "ProgressEngine", "n_rounds",
+           "HaloExchange", "HierarchicalCollectives",
            "ALGORITHMS", "MODES"]
 
 ALGORITHMS = ("ring", "doubling")
@@ -274,6 +287,34 @@ def _drive_blocking(gen):
             w = gen.send(res)
     except StopIteration as stop:
         return stop.value
+
+
+def _execute_schedule(gen, mode: str):
+    """Run one rank's schedule in an interoperability mode (normalized).
+
+    Shared by every collective family (world-wide, neighbourhood,
+    hierarchical).  Outside a task (or without TASK_MULTIPLE) the schedule
+    is driven inline with OS-level waits — the PMPI path.  Inside a task
+    the progress engine advances the rounds from the polling service:
+    ``blocking`` pays one pause on the completion handle, ``event`` binds
+    the handle to the task's event counter and returns it immediately.
+    """
+    task = current_task()
+    if not (tac.is_enabled() and task is not None):
+        result = _drive_blocking(gen)
+        if mode == "blocking":
+            return result
+        handle = CollectiveHandle()
+        handle.complete(result)
+        return handle
+    handle = CollectiveHandle()
+    if mode == "blocking":
+        _engine(task._runtime).submit(_Machine(gen, handle))
+        return tac.wait(handle)
+    counter = get_current_event_counter()
+    increase_current_task_event_counter(counter, 1)
+    _engine(task._runtime).submit(_Machine(gen, handle, counter))
+    return handle
 
 
 def _drive_group(machines: Sequence[_Machine]) -> None:
@@ -507,6 +548,29 @@ def _alltoall_bruck(w: tac.CommWorld, n: int, r: int, tag, blocks):
     return [tmp[(r - i) % n] for i in range(n)]
 
 
+def _opp(direction):
+    dim, disp = direction
+    return (dim, -disp)
+
+
+def _neighbor_round(comm, rank: int, tag, dirs, sends):
+    """One neighbourhood round: isend per outgoing direction, one batched
+    wait on the irecvs of all incoming directions.
+
+    ``dirs`` is the rank's persistent neighbour list ``[((dim, ±1),
+    neighbour)]``; messages are tagged by their direction of *travel*, so
+    the sender in direction ``d`` matches the receiver expecting traffic
+    from its ``-d`` neighbour.  Returns ``{direction: payload received
+    from the neighbour in that direction}``.
+    """
+    for d, nbr in dirs:
+        comm.isend(sends[d], src=rank, dst=nbr, tag=tag(("n", d)))
+    handles = [comm.irecv(src=nbr, dst=rank, tag=tag(("n", _opp(d))))
+               for d, nbr in dirs]
+    got = yield handles
+    return {d: v for (d, _), v in zip(dirs, got)}
+
+
 # Per-op default algorithm, shared by the per-rank methods and run_group:
 # latency-optimal doubling for the rooted/small ops, bandwidth-optimal ring
 # for the bulk ones.
@@ -538,7 +602,13 @@ _SCHEDULES = {
 # Public API
 # ---------------------------------------------------------------------------
 class Collectives:
-    """Collective operations over a :class:`tac.CommWorld`.
+    """Collective operations over a communicator.
+
+    The communicator may be a :class:`tac.CommWorld` or any
+    :class:`tac.CommGroup` (``world.group(...)``, ``world.split(...)``,
+    ``world.cart_create(...)``): ranks are communicator-local and a
+    group's tag namespace keeps concurrent collectives on disjoint
+    sub-groups — or on a group and its parent world — fully isolated.
 
     Every rank participating in a collective calls the same method (from
     its own task or thread).  Tag isolation follows MPI's rule — each rank
@@ -553,9 +623,10 @@ class Collectives:
     successor task.
     """
 
-    def __init__(self, world: tac.CommWorld) -> None:
-        self.world = world
-        self._seq = [itertools.count() for _ in range(world.size)]
+    def __init__(self, comm) -> None:
+        self.comm = comm
+        self.world = comm   # historical alias (pre-sub-communicator name)
+        self._seq = [itertools.count() for _ in range(comm.size)]
 
     # -- plumbing ----------------------------------------------------------
     def _tagger(self, name: str, rank: int, key: Any):
@@ -580,33 +651,8 @@ class Collectives:
         # this rank's subsequent keyless collectives from its peers.
         mode = _norm_mode(mode)
         algorithm = algorithm or _DEFAULT_ALGORITHM[name]
-        return self._execute(
+        return _execute_schedule(
             self._schedule(name, algorithm, rank, key, *args), mode)
-
-    def _execute(self, gen, mode: str):
-        task = current_task()
-        if not (tac.is_enabled() and task is not None):
-            # PMPI path: drive the schedule inline with OS-level waits
-            # (each rank on its own thread, like MPI processes).
-            result = _drive_blocking(gen)
-            if mode == "blocking":
-                return result
-            handle = CollectiveHandle()
-            handle.complete(result)
-            return handle
-        # TASK_MULTIPLE: the progress engine advances the rounds from the
-        # polling service, so the task never holds a live round mid-stack —
-        # blocking mode pays ONE pause on the completion handle (not one
-        # per round, which would deadlock help-first nested blocking),
-        # event mode binds the handle to the task's event counter.
-        handle = CollectiveHandle()
-        if mode == "blocking":
-            _engine(task._runtime).submit(_Machine(gen, handle))
-            return tac.wait(handle)
-        counter = get_current_event_counter()
-        increase_current_task_event_counter(counter, 1)
-        _engine(task._runtime).submit(_Machine(gen, handle, counter))
-        return handle
 
     # -- the seven collectives ---------------------------------------------
     # algorithm=None picks the per-op default from _DEFAULT_ALGORITHM
@@ -658,6 +704,26 @@ class Collectives:
             raise ValueError(f"alltoall needs exactly {self.world.size} "
                              f"blocks, got {len(blocks)}")
         return self._run("alltoall", algorithm, rank, key, mode, blocks)
+
+    # -- neighbourhood collectives (Cartesian communicators) ---------------
+    def neighbor_alltoall(self, sends: Dict[Any, Any], *, rank: int,
+                          mode: str = "blocking", key: Any = None):
+        """Neighbourhood all-to-all (MPI_Neighbor_alltoall).
+
+        Requires a communicator with a Cartesian topology
+        (``CommWorld.cart_create``).  ``sends`` maps each of this rank's
+        neighbour directions ``(dim, ±1)`` to the payload for the
+        neighbour in that direction; the result maps each direction to
+        the payload received *from* that neighbour.  Boundary ranks of a
+        non-periodic grid simply have fewer directions.
+        """
+        mode = _norm_mode(mode)
+        dirs = _topology_dirs(self.comm, rank)
+        sends = _check_dir_payloads(sends, dirs)
+        gen = _neighbor_round(self.comm, rank,
+                              self._tagger("neighbor_alltoall", rank, key),
+                              dirs, sends)
+        return _execute_schedule(gen, mode)
 
     # -- single-threaded group driver --------------------------------------
     def run_group(self, name: str, per_rank: Sequence[Dict[str, Any]],
@@ -727,3 +793,189 @@ class Collectives:
         if len(blocks) != self.world.size:
             raise ValueError("alltoall block count != world size")
         return self._schedule(name, algorithm, rank, key, blocks)
+
+
+# ---------------------------------------------------------------------------
+# Neighbourhood collectives: persistent halo exchange
+# ---------------------------------------------------------------------------
+def _topology_dirs(comm, rank: int):
+    neighbor_dirs = getattr(comm, "neighbor_dirs", None)
+    if neighbor_dirs is None:
+        raise TypeError(
+            "neighbourhood collectives need a communicator with a "
+            "Cartesian topology — build one with CommWorld.cart_create")
+    return tuple(neighbor_dirs(rank))
+
+
+def _check_dir_payloads(sends, dirs):
+    sends = dict(sends)
+    expected = {d for d, _ in dirs}
+    if set(sends) != expected:
+        raise ValueError(
+            f"send payloads must cover exactly this rank's neighbour "
+            f"directions {sorted(expected)}, got {sorted(sends)}")
+    return sends
+
+
+_HALO_IDS = itertools.count()
+
+
+class HaloExchange:
+    """Persistent halo exchange over a Cartesian group (paper §7.1 pattern).
+
+    The neighbourhood analogue of MPI's persistent collectives: the
+    per-rank neighbour lists — one ``(dim, ±1)`` direction per grid edge,
+    from :meth:`tac.CartGroup.neighbor_dirs` — are computed once at
+    construction.  Each :meth:`start` then posts one ``isend`` per
+    outgoing direction and one ``irecv`` per incoming direction through
+    the communicator and runs the round in either interoperability mode:
+
+    * ``mode="blocking"`` (§6.1) returns ``{direction: halo received from
+      that neighbour}``; inside a task the wait pauses (one pause, rounds
+      driven by the progress engine).
+    * ``mode="event"`` (§6.2, the default — halo exchange exists to be
+      overlapped) returns a :class:`CollectiveHandle` immediately and
+      binds one event to the calling task; interior compute proceeds
+      while the halos fly, boundary compute declares a dependency and
+      reads ``handle.result``.
+
+    Stencil codes call one ``start`` per rank per iteration; the implicit
+    per-rank sequence numbers keep iterations' tag spaces apart (or pass
+    ``key=iteration``).
+    """
+
+    def __init__(self, cart) -> None:
+        self.cart = cart
+        self.dirs = {r: _topology_dirs(cart, r) for r in range(cart.size)}
+        self._seq = [itertools.count() for _ in range(cart.size)]
+        self._id = next(_HALO_IDS)
+
+    def neighbors(self, rank: int):
+        """The persistent neighbour list ``[((dim, ±1), neighbour)]``."""
+        return self.dirs[rank]
+
+    def _tagger(self, rank: int, key: Any):
+        if key is None:
+            key = next(self._seq[rank])
+
+        def tag(sub: Any):
+            return ("halo", self._id, key, sub)
+        return tag
+
+    def _schedule(self, rank: int, key: Any, sends):
+        dirs = self.dirs[rank]
+        sends = _check_dir_payloads(sends, dirs)
+        return _neighbor_round(self.cart, rank, self._tagger(rank, key),
+                               dirs, sends)
+
+    def start(self, sends: Dict[Any, Any], *, rank: int,
+              mode: str = "event", key: Any = None):
+        """Post this rank's halo round; see the class docstring for modes."""
+        mode = _norm_mode(mode)
+        return _execute_schedule(self._schedule(rank, key, sends), mode)
+
+    def exchange(self, sends: Dict[Any, Any], *, rank: int,
+                 key: Any = None):
+        """Blocking convenience: ``start(..., mode="blocking")``."""
+        return self.start(sends, rank=rank, mode="blocking", key=key)
+
+    def run_group(self, per_rank_sends: Sequence[Dict[Any, Any]],
+                  key: Any = None) -> List[Dict[Any, Any]]:
+        """All ranks' rounds round-robin on the calling thread — the
+        sequential ('pure'/fork-join) path and the deterministic test
+        driver.  Returns the per-rank received-halo dicts."""
+        if len(per_rank_sends) != self.cart.size:
+            raise ValueError(f"need send dicts for all {self.cart.size} "
+                             f"ranks")
+        machines = [_Machine(self._schedule(r, key, s), CollectiveHandle())
+                    for r, s in enumerate(per_rank_sends)]
+        _drive_group(machines)
+        return [m.handle.result for m in machines]
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical allreduce over nested sub-communicators
+# ---------------------------------------------------------------------------
+class HierarchicalCollectives:
+    """Hierarchical allreduce via two nested groups (ROADMAP item).
+
+    The first consumer of :meth:`tac.CommWorld.split`: construction runs
+    the split collective — consecutive ranks share ``color = rank //
+    group_size`` — and gathers the per-color *intra* groups plus a
+    *leaders* group of each color's rank 0.  An allreduce is then the
+    classic fat-node shape:
+
+    1. chain-reduce to the local leader inside each intra group (the ring
+       family — bandwidth-optimal within a "node"),
+    2. recursive-doubling allreduce across the leaders (latency-optimal
+       across "nodes", any leader count),
+    3. chain-broadcast back down each intra group.
+
+    Works for any world size and ``group_size`` (the last group may be
+    smaller).  Both interoperability modes are supported per rank, same
+    contract as :class:`Collectives`.
+    """
+
+    def __init__(self, world: tac.CommWorld, group_size: int) -> None:
+        if group_size <= 0:
+            raise ValueError(f"group_size must be positive, got "
+                             f"{group_size}")
+        handles = [world.split(r // group_size, key=r, rank=r)
+                   for r in range(world.size)]
+        self.world = world
+        self.group_size = group_size
+        self.intra: List[tac.CommGroup] = [h.result for h in handles]
+        leader_ranks = sorted({g.world_rank(0) for g in self.intra})
+        self.leaders = world.group(leader_ranks)
+        self._seq = [itertools.count() for _ in range(world.size)]
+
+    def _schedule(self, rank: int, key: Any, value, op):
+        intra = self.intra[rank]
+        lr = intra.group_rank(rank)
+        if key is None:
+            key = next(self._seq[rank])
+
+        def tag(stage):
+            return lambda sub: ("hier", key, stage, sub)
+
+        def gen():
+            acc = yield from _reduce_chain(intra, intra.size, lr,
+                                           tag("reduce"), np.asarray(value),
+                                           op, 0)
+            if lr == 0:
+                li = self.leaders.group_rank(rank)
+                acc = yield from _allreduce_doubling(
+                    self.leaders, self.leaders.size, li, tag("leaders"),
+                    acc, op)
+            result = yield from _bcast_chain(intra, intra.size, lr,
+                                             tag("bcast"), acc, 0)
+            return result
+        return gen()
+
+    def allreduce(self, value, *, rank: int, op="sum",
+                  mode: str = "blocking", key: Any = None):
+        mode = _norm_mode(mode)
+        op = _op_fn(op)
+        if not 0 <= rank < self.world.size:
+            raise ValueError(f"rank {rank} out of range for size "
+                             f"{self.world.size}")
+        return _execute_schedule(self._schedule(rank, key, value, op), mode)
+
+    def run_group(self, values: Sequence[Any], *, op="sum",
+                  key: Any = None) -> List[Any]:
+        """Sequential driver: all ranks round-robin on this thread."""
+        if len(values) != self.world.size:
+            raise ValueError(f"need values for all {self.world.size} ranks")
+        op = _op_fn(op)
+        machines = [_Machine(self._schedule(r, key, v, op),
+                             CollectiveHandle())
+                    for r, v in enumerate(values)]
+        _drive_group(machines)
+        return [m.handle.result for m in machines]
+
+    def n_rounds(self) -> int:
+        """Critical-path rounds: intra chain-reduce + leader doubling +
+        intra chain-broadcast (the simulator's latency model)."""
+        deepest = max(g.size for g in self.intra)
+        return (2 * (deepest - 1)
+                + n_rounds("allreduce", "doubling", self.leaders.size))

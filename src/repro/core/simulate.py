@@ -35,6 +35,15 @@ sentinel/serialized collective), ``comm-paused`` pause and pay a resume,
 ``comm-events`` finish immediately and defer their release to collective
 completion (the event-bound collective).  Internally a group is expanded
 into pairwise event edges, so all four disciplines compose unchanged.
+
+**Neighbourhood nodes**: a comm task with ``neighbors=[(peer id, latency),
+...]`` models one rank's round of a *neighbourhood* collective (halo
+exchange): it completes once every listed peer has entered (peer body done
++ that edge's latency) — no all-ranks barrier, only the declared halo
+edges.  Unlike raw ``event_deps``, neighbour edges are validated (peers
+must be comm-kind tasks, so a ``compute`` node cannot silently become a
+message source) and declared symmetrically by each member of the exchange.
+The waiting discipline is again the task's ``kind``.
 """
 
 from __future__ import annotations
@@ -63,6 +72,7 @@ class SimTask:
     name: str = ""
     group: Optional[str] = None      # collective membership label
     group_latency: float = 0.0       # arrival→completion lag of the group
+    neighbors: List[Dep] = field(default_factory=list)  # halo peer edges
 
     # runtime state
     _pending_start: int = 0
@@ -115,6 +125,29 @@ class Simulator:
                 succ_start[dep].append((t.id, lat))
             for dep, lat in t.event_deps:
                 succ_event[dep].append((t.id, lat))
+
+        # Neighbourhood nodes: halo edges from the declared peers only —
+        # completion is max(own body done, peer arrival + edge latency).
+        # Expanded into event edges (non-destructively, per run).
+        for t in tasks:
+            if not t.neighbors:
+                continue
+            if t.kind == COMPUTE:
+                raise ValueError(
+                    f"neighbourhood node {t.name or t.id} must use a comm "
+                    f"kind (held/paused/events), not {COMPUTE!r}")
+            for pid, lat in t.neighbors:
+                peer = byid.get(pid)
+                if peer is None:
+                    raise ValueError(f"neighbourhood node {t.name or t.id} "
+                                     f"references unknown task {pid}")
+                if peer.kind == COMPUTE:
+                    raise ValueError(
+                        f"neighbour peer {peer.name or pid} of "
+                        f"{t.name or t.id} must be a comm-kind task")
+                t._pending_events += 1
+                t._had_events = True
+                succ_event[pid].append((t.id, lat))
 
         # Collective groups: each member waits (per its kind's discipline)
         # for every other member's arrival + the group's round latency —

@@ -27,8 +27,10 @@ communication tasks themselves (the *sentinel* pattern, §7.1).
 
 from __future__ import annotations
 
+import itertools
+import math
 import threading
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
@@ -209,6 +211,9 @@ class CommWorld:
         self._msgs: dict = {}   # (src, dst, tag) -> list[_SendHandle]
         self._recvs: dict = {}  # (src, dst, tag) -> list[_RecvHandle]
         self.stats = {"messages": 0, "bytes": 0}
+        self._group_seq = itertools.count()   # communicator context ids
+        self._split_calls = [0] * size        # per-rank split generation
+        self._splits: Dict[int, dict] = {}    # generation -> rank -> call
 
     def _key(self, src: int, dst: int, tag: Any) -> Tuple[int, int, Any]:
         return (src, dst, tag)
@@ -252,6 +257,247 @@ class CommWorld:
 
     def ssend(self, payload: Any, *, src: int, dst: int, tag: Any = 0) -> None:
         wait(self.isend(payload, src=src, dst=dst, tag=tag, synchronous=True))
+
+    # -- sub-communicators (MPI_Comm_split / MPI_Comm_group / Cart) ---------
+    def group(self, ranks: Sequence[int]) -> "CommGroup":
+        """A sub-communicator over ``ranks`` (group-local order as given).
+
+        Central construction: call once, share the returned object among
+        the member ranks.  Every call mints a fresh context id, so two
+        groups over the same ranks still have disjoint tag spaces (as two
+        ``MPI_Comm_dup``-ed communicators would).
+        """
+        return CommGroup(self, ranks, ("g", next(self._group_seq)))
+
+    def split(self, color: Any, key: int = 0, *, rank: int) -> "GroupHandle":
+        """MPI_Comm_split: a collective group construction.
+
+        Every world rank calls once per split *generation* (its n-th call
+        joins the n-th split, matching MPI's same-order rule).  Returns a
+        handle that completes when the last rank has called; ``result`` is
+        this rank's :class:`CommGroup` — the ranks that passed an equal
+        ``color``, ordered by ``(key, world rank)`` — or ``None`` when
+        ``color`` is ``None`` (MPI_UNDEFINED).  The handle is task-aware:
+        ``tac.wait(handle)`` inside a task pauses instead of spinning.
+        """
+        if not 0 <= rank < self.size:
+            raise ValueError(f"rank {rank} out of range for size {self.size}")
+        handle = GroupHandle()
+        ready = None
+        with self._lock:
+            gen = self._split_calls[rank]
+            self._split_calls[rank] += 1
+            entry = self._splits.setdefault(gen, {})
+            entry[rank] = (color, key, handle)
+            if len(entry) == self.size:
+                ready = self._splits.pop(gen)
+        if ready is not None:
+            # Build the groups and complete the handles OUTSIDE the world
+            # lock: a completing handle may wake a waiter that immediately
+            # posts messages (which need the lock).
+            by_color: Dict[Any, List[Tuple[int, int]]] = {}
+            for r, (c, k, _) in ready.items():
+                if c is not None:
+                    by_color.setdefault(c, []).append((k, r))
+            groups = {
+                c: CommGroup(self, [r for _, r in sorted(members)],
+                             ("split", gen, c))
+                for c, members in by_color.items()}
+            for r, (c, _, h) in ready.items():
+                h.complete(None if c is None else groups[c])
+        return handle
+
+    def cart_create(self, dims: Sequence[int],
+                    periodic: Any = False) -> "CartGroup":
+        """Cartesian sub-communicator over the first ``prod(dims)`` ranks
+        (MPI_Cart_create, row-major rank order).  ``periodic`` is a bool or
+        a per-dimension sequence."""
+        n = math.prod(int(d) for d in dims)
+        if n > self.size:
+            raise ValueError(f"cartesian grid {tuple(dims)} needs {n} ranks,"
+                             f" world has {self.size}")
+        return CartGroup(self, range(n), ("cart", next(self._group_seq)),
+                         dims, periodic)
+
+
+class GroupHandle(EventHandle):
+    """Completion of a collective group construction (``CommWorld.split``)."""
+
+
+class CommGroup:
+    """An ordered subset of a CommWorld's ranks — the MPI sub-communicator.
+
+    Group-local ranks ``0..size-1`` map onto the parent world's ranks in
+    ``ranks`` order.  All traffic flows through the parent world, but every
+    tag is namespaced by the group's context id, so a group's channels can
+    never match the world's (or another group's) — the isolated context of
+    an MPI communicator.  Non-overtaking order per ``(src, dst, tag)`` is
+    inherited from the world.  A :class:`~repro.core.collectives.Collectives`
+    instance accepts a group anywhere it accepts a world.
+    """
+
+    def __init__(self, world: CommWorld, ranks: Sequence[int],
+                 gid: Any) -> None:
+        ranks = tuple(int(r) for r in ranks)
+        if not ranks:
+            raise ValueError("a group needs at least one rank")
+        if len(set(ranks)) != len(ranks):
+            raise ValueError(f"duplicate ranks in group: {ranks}")
+        for r in ranks:
+            if not 0 <= r < world.size:
+                raise ValueError(f"world rank {r} out of range "
+                                 f"(world size {world.size})")
+        self.world = world
+        self.ranks = ranks
+        self.gid = gid
+        self._to_group = {wr: gr for gr, wr in enumerate(ranks)}
+
+    @property
+    def size(self) -> int:
+        return len(self.ranks)
+
+    @property
+    def stats(self) -> dict:
+        return self.world.stats
+
+    def __repr__(self) -> str:
+        return (f"{type(self).__name__}(gid={self.gid!r}, "
+                f"ranks={self.ranks})")
+
+    # -- rank translation (MPI_Group_translate_ranks) -----------------------
+    def world_rank(self, rank: int) -> int:
+        """Group-local rank -> parent world rank."""
+        self._check(rank)
+        return self.ranks[rank]
+
+    def group_rank(self, world_rank: int) -> Optional[int]:
+        """Parent world rank -> group-local rank (None if not a member)."""
+        return self._to_group.get(world_rank)
+
+    def translate(self, rank: int, other: "CommGroup") -> Optional[int]:
+        """This group's ``rank`` in ``other``'s numbering (None if absent)."""
+        return other.group_rank(self.world_rank(rank))
+
+    # -- point-to-point (group-local ranks, namespaced tags) ----------------
+    def _check(self, rank: int) -> None:
+        if not 0 <= rank < len(self.ranks):
+            raise ValueError(f"group rank {rank} out of range "
+                             f"(group size {len(self.ranks)})")
+
+    def _tag(self, tag: Any) -> Any:
+        return ("grp", self.gid, tag)
+
+    def isend(self, payload: Any, *, src: int, dst: int, tag: Any = 0,
+              synchronous: bool = False) -> _SendHandle:
+        self._check(src)
+        self._check(dst)
+        return self.world.isend(payload, src=self.ranks[src],
+                                dst=self.ranks[dst], tag=self._tag(tag),
+                                synchronous=synchronous)
+
+    def irecv(self, *, src: int, dst: int, tag: Any = 0) -> _RecvHandle:
+        self._check(src)
+        self._check(dst)
+        return self.world.irecv(src=self.ranks[src], dst=self.ranks[dst],
+                                tag=self._tag(tag))
+
+    def recv(self, *, src: int, dst: int, tag: Any = 0) -> Any:
+        return wait(self.irecv(src=src, dst=dst, tag=tag))
+
+    def send(self, payload: Any, *, src: int, dst: int, tag: Any = 0) -> None:
+        wait(self.isend(payload, src=src, dst=dst, tag=tag))
+
+    def ssend(self, payload: Any, *, src: int, dst: int, tag: Any = 0) -> None:
+        wait(self.isend(payload, src=src, dst=dst, tag=tag, synchronous=True))
+
+
+class CartGroup(CommGroup):
+    """Cartesian process topology over a sub-communicator (MPI_Cart_create).
+
+    Group-local ranks are laid out row-major over ``dims``; ``periodic``
+    marks wrap-around dimensions.  The neighbourhood collectives
+    (:class:`~repro.core.collectives.HaloExchange`,
+    ``Collectives.neighbor_alltoall``) take their persistent neighbour
+    lists from this topology.
+    """
+
+    def __init__(self, world: CommWorld, ranks: Sequence[int], gid: Any,
+                 dims: Sequence[int], periodic: Any = False) -> None:
+        dims = tuple(int(d) for d in dims)
+        if not dims or any(d <= 0 for d in dims):
+            raise ValueError(f"invalid cartesian dims {dims}")
+        if isinstance(periodic, (bool, int)):
+            periodic = (bool(periodic),) * len(dims)
+        else:
+            periodic = tuple(bool(p) for p in periodic)
+            if len(periodic) != len(dims):
+                raise ValueError("periodic must match dims "
+                                 f"({len(periodic)} != {len(dims)})")
+        super().__init__(world, ranks, gid)
+        if math.prod(dims) != self.size:
+            raise ValueError(f"dims {dims} do not cover {self.size} ranks")
+        self.dims = dims
+        self.periodic = periodic
+
+    @property
+    def ndim(self) -> int:
+        return len(self.dims)
+
+    def coords(self, rank: int) -> Tuple[int, ...]:
+        """Group rank -> cartesian coordinates (row-major)."""
+        self._check(rank)
+        out = []
+        for d in reversed(self.dims):
+            rank, c = divmod(rank, d)
+            out.append(c)
+        return tuple(reversed(out))
+
+    def rank_at(self, coords: Sequence[int]) -> Optional[int]:
+        """Coordinates -> group rank; periodic dims wrap, out-of-range
+        coordinates in non-periodic dims give ``None`` (off the grid)."""
+        if len(coords) != self.ndim:
+            raise ValueError(f"expected {self.ndim} coordinates, "
+                             f"got {len(coords)}")
+        rank = 0
+        for c, d, p in zip(coords, self.dims, self.periodic):
+            if p:
+                c %= d
+            elif not 0 <= c < d:
+                return None
+            rank = rank * d + c
+        return rank
+
+    def shift(self, rank: int, dim: int,
+              disp: int = 1) -> Tuple[Optional[int], Optional[int]]:
+        """MPI_Cart_shift: ``(source, destination)`` for a shift of
+        ``disp`` along ``dim`` — either end is ``None`` off a
+        non-periodic edge."""
+        if not 0 <= dim < self.ndim:
+            raise ValueError(f"dim {dim} out of range for {self.dims}")
+        c = list(self.coords(rank))
+        dst = list(c)
+        dst[dim] += disp
+        src = list(c)
+        src[dim] -= disp
+        return self.rank_at(src), self.rank_at(dst)
+
+    def neighbor_dirs(
+            self, rank: int) -> List[Tuple[Tuple[int, int], int]]:
+        """Persistent neighbour list: ``[((dim, ±1), neighbour rank)]`` in
+        deterministic (dim, -1 then +1) order, off-grid directions
+        omitted.  A direction is *from this rank's perspective*: ``(0, -1)``
+        is the neighbour one step down in dimension 0."""
+        dirs = []
+        for dim in range(self.ndim):
+            for disp in (-1, 1):
+                _, dst = self.shift(rank, dim, disp)
+                if dst is not None and dst != rank:
+                    dirs.append(((dim, disp), dst))
+        return dirs
+
+    def neighbors(self, rank: int) -> List[int]:
+        """Neighbour group ranks in ``neighbor_dirs`` order."""
+        return [nbr for _, nbr in self.neighbor_dirs(rank)]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,38 @@
+"""Documentation must not rot: README/docs links resolve and every
+``repro.*`` symbol the docs mention exists under src/ (PR 2 acceptance).
+The same checker runs standalone in the CI docs job."""
+
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", ROOT / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist():
+    assert (ROOT / "README.md").exists()
+    assert (ROOT / "docs" / "architecture.md").exists()
+    assert (ROOT / "docs" / "collectives.md").exists()
+
+
+def test_docs_links_and_symbols():
+    checker = _load_checker()
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    errors = []
+    for f in files:
+        errors.extend(checker.check_file(f))
+    assert not errors, "\n".join(str(e) for e in errors)
+
+
+def test_symbol_resolver_detects_dangling_names():
+    checker = _load_checker()
+    assert checker.resolve_symbol("repro.core.collectives.HaloExchange")
+    assert not checker.resolve_symbol("repro.core.collectives.NoSuchThing")
+    assert not checker.resolve_symbol("repro.nonexistent_module")

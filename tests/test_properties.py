@@ -11,10 +11,19 @@ Invariants checked:
    makespan(events) <= makespan(paused) <= makespan(held); and every
    makespan is bounded below by the critical path and above by the serial
    sum.
+4. *Collectives correctness* — for random rank counts, payload shapes and
+   per-rank interoperability-mode mixes, every collective agrees with the
+   numpy reference on every rank (ROADMAP open item).
+5. *Sub-group isolation* — collectives on a random disjoint partition of
+   one world, all using the SAME key, never cross tag spaces.
+6. *Cartesian reciprocity* — for random grids, neighbour lists are
+   mutually consistent and a halo round delivers exactly each
+   neighbour's opposite-direction payload.
 """
 
 import threading
 
+import numpy as np
 import pytest
 
 pytest.importorskip(
@@ -25,7 +34,9 @@ pytest.importorskip(
 from hypothesis import given, settings, HealthCheck
 import hypothesis.strategies as st
 
-from repro.core import TaskRuntime
+from repro.core import (Collectives, HaloExchange, HierarchicalCollectives,
+                        TaskRuntime, tac)
+from repro.core.collectives import CollectiveHandle
 from repro.core.simulate import (Simulator, SimTask, COMM_HELD, COMM_PAUSED,
                                  COMM_EVENTS)
 
@@ -160,3 +171,157 @@ def test_simulator_discipline_ordering(graph):
         lat for t in tasks for _, lat in t.start_deps + t.event_deps)
     assert events <= serial * n_ranks + 1e6  # sanity upper bound (loose)
     assert events > 0
+
+
+# -- 4. collectives correctness ----------------------------------------------
+# Plain helpers carry the check logic so non-hypothesis smoke tests (and
+# debugging sessions) can drive the same invariants with fixed inputs.
+def _resolve(v):
+    return v.result if isinstance(v, CollectiveHandle) else v
+
+
+def _check_allreduce(n, shape, alg, modes, workers):
+    """Per-rank mode mixes on the task runtime must match numpy."""
+    tac.init(tac.TASK_MULTIPLE)
+    world = tac.CommWorld(n)
+    coll = Collectives(world)
+    vals = [(np.arange(int(np.prod(shape)), dtype=np.float64) * (r + 1)
+             + r).reshape(shape) for r in range(n)]
+    ref = np.sum(np.stack(vals), axis=0)
+    out = {}
+
+    def make(r):
+        def body():
+            out[r] = coll.allreduce(vals[r], rank=r, op="sum",
+                                    algorithm=alg, mode=modes[r % len(modes)],
+                                    key="prop")
+        return body
+
+    with TaskRuntime(num_workers=workers) as rt:
+        for r in range(n):
+            rt.submit(make(r))
+        rt.taskwait()
+    for r in range(n):
+        np.testing.assert_allclose(_resolve(out[r]), ref,
+                                   rtol=1e-12, atol=1e-12)
+
+
+@settings(**_SETTINGS)
+@given(st.integers(min_value=1, max_value=6),
+       st.sampled_from([(1,), (7,), (13,), (3, 4), (2, 3, 2)]),
+       st.sampled_from(["ring", "doubling"]),
+       st.lists(st.sampled_from(["blocking", "event"]),
+                min_size=1, max_size=6),
+       st.integers(min_value=1, max_value=4))
+def test_allreduce_mode_mixes(n, shape, alg, modes, workers):
+    _check_allreduce(n, shape, alg, modes, workers)
+
+
+def _check_gather_scatter(n, size, alg):
+    """allgather/reduce_scatter on the sequential driver match numpy for
+    any payload size, including size % n != 0."""
+    world = tac.CommWorld(n)
+    coll = Collectives(world)
+    vals = [np.arange(size, dtype=np.float64) + 100 * r for r in range(n)]
+    gathered = coll.run_group("allgather", [{"value": v} for v in vals],
+                              algorithm=alg)
+    for r in range(n):
+        for i in range(n):
+            np.testing.assert_array_equal(gathered[r][i], vals[i])
+    chunks = coll.run_group("reduce_scatter", [{"value": v} for v in vals],
+                            op="sum", algorithm=alg)
+    ref = np.array_split(np.sum(np.stack(vals), axis=0), n)
+    for r in range(n):
+        np.testing.assert_allclose(chunks[r], ref[r], rtol=1e-12)
+
+
+@settings(**_SETTINGS)
+@given(st.integers(min_value=1, max_value=7),
+       st.integers(min_value=1, max_value=40),
+       st.sampled_from(["ring", "doubling"]))
+def test_gather_scatter_shapes(n, size, alg):
+    _check_gather_scatter(n, size, alg)
+
+
+# -- 5. sub-group isolation ---------------------------------------------------
+def _check_partition_isolation(sizes, workers):
+    """Disjoint groups of a shared world run event-bound allreduces with
+    the same key concurrently; each group's sum must be its own."""
+    tac.init(tac.TASK_MULTIPLE)
+    n = sum(sizes)
+    world = tac.CommWorld(n)
+    base = 0
+    groups = []
+    for s in sizes:
+        groups.append(world.group(list(range(base, base + s))))
+        base += s
+    colls = [Collectives(g) for g in groups]
+    out = {}
+
+    def make(gi, gr):
+        def body():
+            wr = groups[gi].world_rank(gr)
+            out[wr] = colls[gi].allreduce(np.float64(wr), rank=gr,
+                                          op="sum", mode="event", key="k")
+        return body
+
+    with TaskRuntime(num_workers=workers) as rt:
+        for gi, g in enumerate(groups):
+            for gr in range(g.size):
+                rt.submit(make(gi, gr))
+        rt.taskwait()
+    for g in groups:
+        expect = float(sum(g.ranks))
+        for gr in range(g.size):
+            got = float(_resolve(out[g.world_rank(gr)]))
+            assert got == expect, (g.ranks, gr, got, expect)
+
+
+@settings(**_SETTINGS)
+@given(st.lists(st.integers(min_value=1, max_value=4),
+                min_size=1, max_size=3),
+       st.integers(min_value=2, max_value=4))
+def test_partition_isolation(sizes, workers):
+    _check_partition_isolation(sizes, workers)
+
+
+def _check_hierarchical(n, group_size):
+    world = tac.CommWorld(n)
+    hier = HierarchicalCollectives(world, group_size)
+    vals = [np.float64(3 * r + 1) for r in range(n)]
+    out = hier.run_group(vals, op="sum")
+    assert all(float(v) == float(sum(vals)) for v in out), out
+
+
+@settings(**_SETTINGS)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=9))
+def test_hierarchical_any_grouping(n, group_size):
+    _check_hierarchical(n, group_size)
+
+
+# -- 6. cartesian reciprocity -------------------------------------------------
+def _check_cart_halo(dims, periodic):
+    n = int(np.prod(dims))
+    world = tac.CommWorld(n)
+    cart = world.cart_create(dims, periodic=periodic)
+    # reciprocity: my neighbour in direction d has me in some direction
+    # whose step leads back (wrap-aware), and a halo round delivers each
+    # neighbour's opposite-direction payload
+    hx = HaloExchange(cart)
+    sends = [{d: ("edge", r, d) for d, _ in hx.neighbors(r)}
+             for r in range(n)]
+    got = hx.run_group(sends)
+    for r in range(n):
+        for d, nbr in cart.neighbor_dirs(r):
+            opposite = (d[0], -d[1])
+            assert (opposite, r) in cart.neighbor_dirs(nbr)
+            assert got[r][d] == ("edge", nbr, opposite)
+
+
+@settings(**_SETTINGS)
+@given(st.sampled_from([(2,), (3,), (2, 2), (3, 2), (2, 3), (4, 2),
+                        (2, 2, 2), (3, 1)]),
+       st.booleans())
+def test_cart_halo_reciprocity(dims, periodic):
+    _check_cart_halo(dims, periodic)

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Docs link & symbol checker (run by the CI docs job and tests/test_docs.py).
+
+Checks, over README.md and docs/*.md:
+
+1. every relative markdown link ``[text](path)`` resolves to an existing
+   file (external http(s)/mailto links and pure #anchors are skipped);
+2. every dotted ``repro.*`` name mentioned anywhere in the text (prose or
+   code fences) resolves to a real module/attribute under ``src/`` — so
+   renaming an API without updating the docs fails CI.
+
+Usage:  PYTHONPATH=src python tools/check_docs.py [file.md ...]
+Exits non-zero listing every broken link / dangling symbol.
+"""
+
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SYMBOL_RE = re.compile(r"\brepro(?:\.\w+)+")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def resolve_symbol(dotted: str) -> bool:
+    parts = dotted.split(".")
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[i:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_file(path: pathlib.Path) -> list:
+    errors = []
+    text = path.read_text()
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: broken link -> {m.group(1)}")
+    for dotted in sorted(set(SYMBOL_RE.findall(text))):
+        if not resolve_symbol(dotted):
+            errors.append(f"{path}: dangling symbol -> {dotted}")
+    return errors
+
+
+def main(argv: list) -> int:
+    if argv:
+        files = [pathlib.Path(a) for a in argv]
+    else:
+        files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file missing")
+            continue
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} error(s))")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

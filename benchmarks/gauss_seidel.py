@@ -118,6 +118,10 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
     cart = world.cart_create((py, px))
     hx = HaloExchange(cart)
     hier = HierarchicalCollectives(world, px)   # intra-row + leader column
+    # persistent residual allreduce (MPI_Allreduce_init analogue): the
+    # three-stage hierarchical schedule is resolved once and re-posted
+    # every iteration with key=("res", it).
+    residual_coll = hier.persistent(op="sum")
     halos: Dict = {}       # (rank, it) -> {direction: edge} | handle
     residuals: Dict = {}   # (rank, it) -> float | CollectiveHandle
     tac.init(tac.TASK_MULTIPLE if version.startswith("interop")
@@ -279,16 +283,16 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
         if version in ("pure", "forkjoin"):
             if version == "forkjoin":
                 rt.taskwait()       # fork-join: iteration fully done
-            vals = hier.run_group(
+            vals = residual_coll.run_group(
                 [local_residual(r, it) for r in range(n_ranks)],
-                op="sum", key=("res", it))
+                key=("res", it))
             for r in range(n_ranks):
                 residuals[(r, it)] = float(vals[r])
         elif version == "sentinel":
             def res_group(it2=it):
-                vals = hier.run_group(
+                vals = residual_coll.run_group(
                     [local_residual(r, it2) for r in range(n_ranks)],
-                    op="sum", key=("res", it2))
+                    key=("res", it2))
                 for r in range(n_ranks):
                     residuals[(r, it2)] = float(vals[r])
             rt.submit(res_group,
@@ -301,13 +305,11 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
                 def res_task(r=r, it2=it):
                     v = local_residual(r, it2)
                     if version == "interop-nonblk":
-                        residuals[(r, it2)] = hier.allreduce(
-                            v, rank=r, op="sum", mode="event",
-                            key=("res", it2))
+                        residuals[(r, it2)] = residual_coll.start(
+                            v, rank=r, mode="event", key=("res", it2))
                     else:
-                        residuals[(r, it2)] = float(hier.allreduce(
-                            v, rank=r, op="sum", mode="blocking",
-                            key=("res", it2)))
+                        residuals[(r, it2)] = float(residual_coll.start(
+                            v, rank=r, mode="blocking", key=("res", it2)))
                 ry, rx = cart.coords(r)
                 rt.submit(res_task,
                           in_=[("blk", gy, gx, it)
@@ -357,9 +359,10 @@ def build_sim_graph(version, *, n_ranks, nby, nbx, iters,
 
     comm_kind = {"sentinel": COMM_HELD, "interop-blk": COMM_PAUSED,
                  "interop-nonblk": COMM_EVENTS}.get(version, COMM_HELD)
-    # hierarchical residual latency: the same critical-path model the
-    # real execution runs (intra-row chain + leader doubling)
-    res_lat = HierarchicalCollectives(world, px).n_rounds() * latency
+    # hierarchical residual latency from the schedule IR's α-β cost model
+    # (α = per-message latency, wires/combines free — the pure-latency
+    # point of the model, identical to the old rounds × latency count)
+    res_lat = HierarchicalCollectives(world, px).cost(latency, 0.0, 0)
     last_comm = [None] * n_ranks
 
     def boundary_names(r, it):
@@ -478,7 +481,7 @@ def simulate_version(version, *, n_ranks, workers=48, nby=4, nbx=16,
 
 
 # ---------------------------------------------------------------------------
-def bench(print_fn=print):
+def bench(print_fn=print, smoke: bool = False):
     rows = []
     ref, ref_stats = run_real("pure")
     for v in VERSIONS[1:]:
@@ -487,6 +490,19 @@ def bench(print_fn=print):
         assert err < 1e-10, (v, err)
         for it, val in ref_stats["residuals"].items():
             assert abs(st["residuals"][it] - val) < 1e-9, (v, it)
+
+    if smoke:
+        # CI bench-smoke job: all five versions numerically agree (above)
+        # and the schedule acceptance ordering holds on one simulated
+        # point — event-bound strictly beats the sentinel serialisation.
+        mks = {v: simulate_version(v, n_ranks=4, nby=4, nbx=4, iters=4)
+               for v in VERSIONS}
+        assert mks["interop-nonblk"] < mks["sentinel"], mks
+        for v in VERSIONS:
+            rows.append((f"gs_smoke_{v}", mks[v] * 1e6, "smoke"))
+        for r in rows:
+            print_fn(f"{r[0]},{r[1]:.1f},{r[2]}")
+        return rows
 
     for v in VERSIONS:
         t0 = time.monotonic()
@@ -527,4 +543,5 @@ def bench(print_fn=print):
 
 
 if __name__ == "__main__":
-    bench()
+    import sys
+    bench(smoke="--smoke" in sys.argv[1:])

@@ -35,7 +35,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import Collectives, TaskRuntime, tac
-from repro.core.collectives import n_rounds
+from repro.core import schedule as schedule_ir
 from repro.core.simulate import Simulator, SimTask, COMPUTE, COMM_PAUSED, \
     COMM_EVENTS, COMM_HELD
 
@@ -198,7 +198,10 @@ def build_sim(version, *, n_ranks, n_fields=64, steps=6, t_phys=1.0,
             "interop-nonblk": COMM_EVENTS}.get(version, COMM_HELD)
     fl = n_fields // n_ranks  # fields per rank in spectral space
     tp = t_phys / fl          # physics cost per (field, rank) slice
-    a2a_lat = n_rounds("alltoall", "ring", n_ranks) * latency
+    # pairwise all-to-all latency from the IR cost model (α = per-message
+    # latency, wires free — equals the old rounds × latency count)
+    a2a_lat = schedule_ir.build("alltoall", "ring", n_ranks).cost(
+        latency, 0.0, 0)
 
     for it in range(steps):
         for r in range(n_ranks):

@@ -1,34 +1,87 @@
 """Gradient-synchronisation schedule benchmark (Level-B TAMPI adaptation).
 
-Compares the three in-graph communication schedules (core/overlap.py):
-``fused`` (fork-join analogue), ``bucketed`` (interop analogue) and
-``sentinel`` (artificial serialisation) on a real LM train step:
+Compares the three in-graph communication schedules (core/overlap.py over
+core/lowering.py): ``fused`` (fork-join analogue), ``bucketed`` (interop
+analogue) and ``sentinel`` (artificial serialisation) on a real LM train
+step:
 
 * REAL execution wall time on the local mesh (DP-only — CPU backend
   restriction documented in tests/test_distributed.py);
 * structural collective counts from the pre-optimisation StableHLO (the
   program as written — the TPU combiner threshold is the production knob
-  that trades these back, see EXPERIMENTS.md §Perf).
+  that trades these back, see EXPERIMENTS.md §Perf);
+* **α-β predicted times** from the schedule IR
+  (`repro.core.schedule.Schedule.cost`): per mode, the predicted seconds
+  of its collective schedule on a reference 8-way DP mesh — sentinel
+  serialises the buckets (sum of costs), bucketed overlaps them (max),
+  fused pays one whole-payload node — written to ``BENCH_overlap.json``
+  next to the measured wall times so schedule regressions in either level
+  are visible in CI (the ``--smoke`` bench job).
 
 CSV: name,us_per_call,derived
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
+import sys
 import time
 
 import jax
 
 from repro import configs, optim
+from repro.core import schedule as schedule_ir
+from repro.core.overlap import _make_buckets
 from repro.models import inputs
 from repro.runtime import steps
 from repro.runtime.sharding import ShardingPolicy
 from repro.launch.mesh import make_mesh
 
+# Nominal host-interconnect model for the predicted times (per-message
+# latency, seconds per byte on the wire, combine seconds per byte).
+ALPHA, BETA, GAMMA = 5e-6, 1e-9, 2.5e-10
+REF_RANKS = 8               # predicted times quoted for an 8-way DP mesh
 
-def bench(print_fn=print):
+
+def predict(mode: str, leaf_bytes: list, bucket_bytes: int,
+            n: int = REF_RANKS) -> dict:
+    """α-β predicted seconds for one grad-sync under a given schedule.
+
+    Buckets come from the SAME greedy bucketing the real step uses
+    (`repro.core.overlap._make_buckets` over the actual per-leaf wire
+    bytes), each bucket's algorithm/segment count from the IR's own
+    selection (`repro.core.schedule.best_schedule`); the mode decides how
+    bucket costs compose: one fused node, overlapped buckets (max —
+    dependencies alone order them), or sentinel-serialised buckets (sum).
+    """
+    total = sum(leaf_bytes)
+    if mode == "fused":
+        bucket_sizes = [total]
+    else:
+        buckets = _make_buckets(leaf_bytes, bucket_bytes)
+        bucket_sizes = [sum(leaf_bytes[i] for i in b) for b in buckets]
+    costs, algs, segs = [], set(), set()
+    for sz in bucket_sizes:
+        sched = schedule_ir.best_schedule("allreduce", n, sz,
+                                          alpha=ALPHA, beta=BETA,
+                                          gamma=GAMMA)
+        costs.append(sched.cost(ALPHA, BETA, sz, gamma=GAMMA))
+        algs.add(sched.algorithm)
+        segs.add(sched.segments)
+    cost = sum(costs) if mode == "sentinel" else max(costs)
+    return {"predicted_s": cost, "algorithms": sorted(algs),
+            "segments": sorted(segs), "n_buckets": len(bucket_sizes),
+            "bucket_bytes_max": max(bucket_sizes), "ref_ranks": n}
+
+
+def bench(print_fn=print, smoke: bool = False,
+          json_path: str = "BENCH_overlap.json"):
     rows = []
-    cfg = configs.smoke("granite_3_2b").scaled(dtype="float32", n_layers=8)
+    n_layers = 2 if smoke else 8
+    reps = 2 if smoke else 5
+    cfg = configs.smoke("granite_3_2b").scaled(dtype="float32",
+                                               n_layers=n_layers)
     opt_cfg = optim.OptimConfig()
     key = jax.random.PRNGKey(0)
     state = steps.init_train_state(cfg, opt_cfg, key)
@@ -36,13 +89,22 @@ def bench(print_fn=print):
     abatch = jax.eval_shape(lambda: batch)
     mesh = make_mesh((1, 1), ("data", "model"))  # 1-core box: schedule
     # structure is mesh-size independent; wall time measures overheads
+    bucket_bytes = 1 << 16
+    # fp32 training: grads travel in their own (fp32) dtype, so the wire
+    # bytes ARE size × itemsize — the same list sync_grads buckets by.
+    leaf_bytes = [int(l.size) * l.dtype.itemsize
+                  for l in jax.tree_util.tree_leaves(state.params)]
+    grad_bytes = sum(leaf_bytes)
 
+    report = {"alpha": ALPHA, "beta": BETA, "gamma": GAMMA,
+              "grad_bytes": grad_bytes, "bucket_bytes": bucket_bytes,
+              "modes": {}}
     for mode in ("fused", "bucketed", "sentinel"):
         policy = ShardingPolicy(fsdp=False, tp=False, sp=False, remat=None,
                                 grad_sync=mode)
         with mesh:
             make = steps.build_train_step_manual(
-                cfg, mesh, policy, opt_cfg, bucket_bytes=1 << 16)
+                cfg, mesh, policy, opt_cfg, bucket_bytes=bucket_bytes)
             f = make(jax.eval_shape(lambda: state), abatch)
             lowered = f.lower(state, batch)
             txt = lowered.as_text()
@@ -52,17 +114,32 @@ def bench(print_fn=print):
             s, m = compiled(state, batch)          # warmup
             jax.block_until_ready(m["loss"])
             t0 = time.monotonic()
-            n = 5
-            for _ in range(n):
+            for _ in range(reps):
                 s, m = compiled(s, batch)
             jax.block_until_ready(m["loss"])
-            dt = (time.monotonic() - t0) / n
+            dt = (time.monotonic() - t0) / reps
         rows.append((f"gradsync_{mode}", dt * 1e6,
                      f"all_reduces={n_ar};barriers={n_barrier}"))
+        report["modes"][mode] = dict(
+            predict(mode, leaf_bytes, bucket_bytes),
+            measured_s=dt, all_reduces=n_ar, barriers=n_barrier)
+
+    # segmented vs unsegmented ring under the same model: the pipelining
+    # claim the simulator verifies (tests/test_schedule.py) quoted here
+    # for the bench report.
+    un = schedule_ir.build("allreduce", "ring", REF_RANKS)
+    seg = schedule_ir.build("allreduce", "ring", REF_RANKS, segments=4)
+    report["segmented_ring"] = {
+        "payload_bytes": grad_bytes,
+        "unsegmented_s": un.cost(ALPHA, BETA, grad_bytes, gamma=GAMMA),
+        "segments4_s": seg.cost(ALPHA, BETA, grad_bytes, gamma=GAMMA),
+    }
+    pathlib.Path(json_path).write_text(json.dumps(report, indent=2))
+    rows.append(("gradsync_predict_json", 0.0, json_path))
     for r in rows:
         print_fn(f"{r[0]},{r[1]:.1f},{r[2]}")
     return rows
 
 
 if __name__ == "__main__":
-    bench()
+    bench(smoke="--smoke" in sys.argv[1:])

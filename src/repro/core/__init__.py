@@ -1,8 +1,11 @@
 """repro.core — the paper's contribution: task runtime + Task-Aware Collectives.
 
 Exports the two generic runtime APIs proposed by the paper (§4) with their
-original names, the task runtime that implements them, and the TAC library
-(the TAMPI analogue for JAX).
+original names, the task runtime that implements them, the TAC library
+(the TAMPI analogue for JAX), and the schedule-IR stack: one schedule
+description (`repro.core.schedule`) with two executors — the host
+progress engine (`repro.core.collectives`, Level A) and the XLA lowering
+(`repro.core.lowering`, Level B).
 """
 
 from .events import (BlockingContext, EventCounter,
@@ -14,10 +17,14 @@ from .polling import PollingRegistry
 from .taskgraph import Task, TaskGraph
 from .executor import TaskRuntime, TaskError
 from . import tac
+from . import schedule
 from . import simulate
 from . import collectives
+from . import lowering
+from . import overlap
+from .schedule import Schedule, build_neighbor, best_schedule
 from .collectives import (Collectives, CollectiveHandle, HaloExchange,
-                          HierarchicalCollectives)
+                          HierarchicalCollectives, PersistentCollective)
 from .tac import CommWorld, CommGroup, CartGroup
 
 __all__ = [
@@ -33,7 +40,12 @@ __all__ = [
     "EventCounter", "current_task",
     # TAMPI analogue + task-aware collectives
     "tac", "simulate", "collectives", "Collectives", "CollectiveHandle",
+    # schedule IR + its two executors
+    "schedule", "lowering", "overlap", "Schedule", "build_neighbor",
+    "best_schedule",
     # sub-communicators + neighbourhood collectives
     "CommWorld", "CommGroup", "CartGroup", "HaloExchange",
     "HierarchicalCollectives",
+    # persistent collectives (MPI_*_init analogue)
+    "PersistentCollective",
 ]

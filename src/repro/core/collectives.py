@@ -8,15 +8,17 @@ extend naturally to collectives when completion is driven by a
 progress/notification engine instead of per-call blocking.  This module
 implements that design for the host runtime:
 
-* Every collective is expressed as a *schedule of point-to-point rounds*
-  over a communicator — a :class:`~repro.core.tac.CommWorld` or any
-  :class:`~repro.core.tac.CommGroup` sub-communicator (``world.group``,
-  the collective ``world.split``, Cartesian ``world.cart_create``); a
-  group's namespaced tag context keeps concurrent collectives on
-  disjoint groups, or on a group and its parent, isolated.  A schedule
-  is a Python generator that posts ``isend``s and yields the ``irecv``
-  handles it needs completed before the next round.  Two algorithm
-  families are provided per collective:
+* Every collective is described ONCE as **data** — a
+  :class:`repro.core.schedule.Schedule`, a DAG of
+  ``Send``/``Recv``/``Combine``/``Slice``... ops over abstract
+  communicator-local ranks (see :mod:`repro.core.schedule`).  This module
+  is the schedule IR's **Level-A executor**: :func:`_interpret` walks one
+  rank's program, posting ``isend``/``irecv`` through the communicator —
+  a :class:`~repro.core.tac.CommWorld` or any
+  :class:`~repro.core.tac.CommGroup` sub-communicator — and yielding the
+  handles it must wait on.  The in-graph **Level-B executor** for the
+  same IR is :mod:`repro.core.lowering`.  Two algorithm families are
+  provided per collective:
 
   - ``ring``      — neighbour rounds (ring/chain/pairwise): ``n-1`` steps,
                     bandwidth-optimal for large payloads.
@@ -26,6 +28,10 @@ implements that design for the host runtime:
                     of-two rank counts are handled by folding (reductions)
                     or by the Bruck construction (gathers/all-to-all),
                     which works for any ``n`` directly.
+  - ``"auto"``    — pick by minimum predicted α-β cost
+                    (:func:`repro.core.schedule.best_schedule`) for the
+                    actual payload size, including the segment count of
+                    the pipelined ring allreduce.
 
 * Each collective runs in one of the paper's two interoperability modes:
 
@@ -48,19 +54,21 @@ implements that design for the host runtime:
     released only when the collective completes; successors read
     ``handle.result``.
 
-Determinism: within one collective all ranks apply the combining operator
-in matching order, so every rank finishes with a bitwise-identical result
-(for commutative IEEE ops like add/max).  Tag space is isolated per call —
-either through the per-rank call sequence (MPI's "same order on every
-rank" rule) or an explicit ``key`` for programs whose task schedulers may
-reorder independent collectives.
+Determinism: the combine operand order is part of the schedule, so every
+rank applies the operator in matching order and finishes with a bitwise-
+identical result (for commutative IEEE ops like add/max).  Tag space is
+isolated per call — either through the per-rank call sequence (MPI's
+"same order on every rank" rule) or an explicit ``key`` for programs
+whose task schedulers may reorder independent collectives.
 
 Beyond the seven world-wide collectives this module provides the
 *neighbourhood* layer over Cartesian groups —
 :meth:`Collectives.neighbor_alltoall` and the persistent
-:class:`HaloExchange` — and :class:`HierarchicalCollectives`, an
-allreduce over two nested sub-groups.  All families share the same
-schedule machinery, progress engine and interoperability modes.
+:class:`HaloExchange` — :class:`HierarchicalCollectives` (an allreduce
+composed from three schedules over two nested sub-groups), and
+**persistent collectives** (:meth:`Collectives.persistent`, the
+``MPI_Allreduce_init`` analogue): since schedules are data, a pre-built
+handle can be re-posted every iteration with a fresh tag space.
 """
 
 from __future__ import annotations
@@ -73,13 +81,16 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from . import tac
+from . import schedule as schedule_ir
+from .schedule import (Combine, Const, Copy, Pack, Recv, Schedule, Send,
+                       Slice, Unpack)
 from .events import (current_task, get_current_event_counter,
                      increase_current_task_event_counter,
                      decrease_task_event_counter)
 
 __all__ = ["Collectives", "CollectiveHandle", "ProgressEngine", "n_rounds",
            "HaloExchange", "HierarchicalCollectives",
-           "ALGORITHMS", "MODES"]
+           "PersistentCollective", "ALGORITHMS", "MODES"]
 
 ALGORITHMS = ("ring", "doubling")
 MODES = ("blocking", "event")
@@ -90,7 +101,7 @@ _OPS: Dict[str, Callable] = {"sum": np.add, "prod": np.multiply,
 _ALG_ALIASES = {"ring": "ring", "chain": "ring", "pairwise": "ring",
                 "doubling": "doubling", "recursive-doubling": "doubling",
                 "rd": "doubling", "tree": "doubling", "bruck": "doubling",
-                "dissemination": "doubling"}
+                "dissemination": "doubling", "auto": "auto"}
 _MODE_ALIASES = {"blocking": "blocking", "wait": "blocking",
                  "event": "event", "iwait": "event",
                  "nonblocking": "event", "non-blocking": "event"}
@@ -123,10 +134,20 @@ def _norm_mode(mode: str) -> str:
 
 
 def n_rounds(name: str, algorithm: str, size: int) -> int:
-    """Message rounds on the critical path — the simulator's latency model."""
+    """Message rounds on the critical path — the closed-form latency model.
+
+    Equals ``schedule.build(name, algorithm, size).rounds`` (asserted in
+    tests/test_schedule.py) but needs no schedule construction; for
+    payload-size-aware predictions use
+    :meth:`repro.core.schedule.Schedule.cost` instead.
+    """
+    alg = _norm_alg(algorithm)
+    if alg == "auto":
+        raise ValueError('n_rounds needs a concrete algorithm, not "auto" '
+                         '(auto is payload-size dependent — use '
+                         'Schedule.cost / Collectives.predict)')
     if size <= 1:
         return 0
-    alg = _norm_alg(algorithm)
     log2_ceil = max(1, math.ceil(math.log2(size)))
     if alg == "doubling":
         # Reductions butterfly over 2^⌊log2 n⌋ after folding the remainder
@@ -293,11 +314,12 @@ def _execute_schedule(gen, mode: str):
     """Run one rank's schedule in an interoperability mode (normalized).
 
     Shared by every collective family (world-wide, neighbourhood,
-    hierarchical).  Outside a task (or without TASK_MULTIPLE) the schedule
-    is driven inline with OS-level waits — the PMPI path.  Inside a task
-    the progress engine advances the rounds from the polling service:
-    ``blocking`` pays one pause on the completion handle, ``event`` binds
-    the handle to the task's event counter and returns it immediately.
+    hierarchical, persistent).  Outside a task (or without TASK_MULTIPLE)
+    the schedule is driven inline with OS-level waits — the PMPI path.
+    Inside a task the progress engine advances the rounds from the polling
+    service: ``blocking`` pays one pause on the completion handle,
+    ``event`` binds the handle to the task's event counter and returns it
+    immediately.
     """
     task = current_task()
     if not (tac.is_enabled() and task is not None):
@@ -350,225 +372,129 @@ def _drive_group(machines: Sequence[_Machine]) -> None:
 
 
 # ---------------------------------------------------------------------------
-# Schedules.  Each generator: posts isends, yields irecv handle(s), receives
-# the payload(s) via send(); StopIteration.value is the rank's result.
+# The Level-A executor: one generator interprets any Schedule.
+# Posts isends, yields irecv handle(s), receives the payload(s) via
+# send(); StopIteration.value is the rank's result.
 # ---------------------------------------------------------------------------
-def _barrier_dissemination(w: tac.CommWorld, n: int, r: int, tag):
-    k, rnd = 1, 0
-    while k < n:
-        w.isend(True, src=r, dst=(r + k) % n, tag=tag(rnd))
-        yield w.irecv(src=(r - k) % n, dst=r, tag=tag(rnd))
-        k <<= 1
-        rnd += 1
-    return None
+def _bind_inputs(sched: Schedule, value, blocks, sends):
+    """Initial buffer environment for one rank; returns (env, shape)."""
+    env: Dict[Any, Any] = {}
+    shape = None
+    kind = sched.input_kind
+    if kind == "value":
+        env["in"] = value
+    elif kind == "array":
+        env["in"] = np.asarray(value)
+    elif kind == "chunks":
+        arr = np.asarray(value)
+        shape = arr.shape
+        outer = np.array_split(arr.reshape(-1), sched.n)
+        if sched.segments == 1:
+            for i, c in enumerate(outer):
+                env[("c", i)] = c
+        else:
+            for i, c in enumerate(outer):
+                segs = np.array_split(c, sched.segments)
+                for s, seg in enumerate(segs):
+                    env[("c", i, s)] = seg
+    elif kind == "blocks":
+        for d in range(sched.n):
+            env[("b", d)] = blocks[d]
+    elif kind == "dirs":
+        for d, v in sends.items():
+            env[("s", d)] = v
+    elif kind != "none":            # pragma: no cover - new input kinds
+        raise ValueError(f"unknown input kind {kind!r}")
+    return env, shape
 
 
-def _barrier_ring(w: tac.CommWorld, n: int, r: int, tag):
-    # n-1 neighbour rounds: afterwards every rank has transitively heard
-    # from every other, so none can exit before all have entered.
-    for k in range(n - 1):
-        w.isend(True, src=r, dst=(r + 1) % n, tag=tag(k))
-        yield w.irecv(src=(r - 1) % n, dst=r, tag=tag(k))
-    return None
+def _interpret(sched: Schedule, comm, rank: int, tag, *, value=None,
+               op=None, blocks=None, sends=None):
+    """Execute rank ``rank``'s program of ``sched`` over ``comm``.
 
-
-def _bcast_tree(w: tac.CommWorld, n: int, r: int, tag, value, root: int):
-    """Binomial-tree broadcast (MPICH-style), any rank count."""
-    vr = (r - root) % n
-    buf = value
-    mask = 1
-    while mask < n:
-        if vr & mask:
-            buf = yield w.irecv(src=(r - mask) % n, dst=r, tag=tag(mask))
-            break
-        mask <<= 1
-    mask >>= 1
-    while mask:
-        if vr + mask < n:
-            w.isend(buf, src=r, dst=(r + mask) % n, tag=tag(mask))
-        mask >>= 1
-    return buf
-
-
-def _bcast_chain(w: tac.CommWorld, n: int, r: int, tag, value, root: int):
-    vr = (r - root) % n
-    buf = value
-    if vr > 0:
-        buf = yield w.irecv(src=(r - 1) % n, dst=r, tag=tag("c"))
-    if vr < n - 1:
-        w.isend(buf, src=r, dst=(r + 1) % n, tag=tag("c"))
-    return buf
-
-
-def _reduce_tree(w: tac.CommWorld, n: int, r: int, tag, value, op,
-                 root: int):
-    """Binomial-tree reduction to ``root`` (commutative ``op``)."""
-    vr = (r - root) % n
-    acc = value
-    mask = 1
-    while mask < n:
-        if vr & mask:
-            w.isend(acc, src=r, dst=(r - mask) % n, tag=tag(mask))
-            return None
-        partner_vr = vr | mask
-        if partner_vr < n:
-            other = yield w.irecv(src=(r + mask) % n, dst=r, tag=tag(mask))
-            acc = op(acc, other)
-        mask <<= 1
-    return acc
-
-
-def _reduce_chain(w: tac.CommWorld, n: int, r: int, tag, value, op,
-                  root: int):
-    vr = (r - root) % n
-    acc = value
-    if vr < n - 1:
-        other = yield w.irecv(src=(r + 1) % n, dst=r, tag=tag("c"))
-        acc = op(acc, other)
-    if vr > 0:
-        w.isend(acc, src=r, dst=(r - 1) % n, tag=tag("c"))
-        return None
-    return acc
-
-
-def _allreduce_ring(w: tac.CommWorld, n: int, r: int, tag, value, op):
-    """Ring allreduce: reduce-scatter rounds then allgather rounds."""
-    arr = np.asarray(value)
-    chunks = list(np.array_split(arr.reshape(-1), n))
-    right, left = (r + 1) % n, (r - 1) % n
-    for k in range(n - 1):          # reduce-scatter: end owning chunk r
-        w.isend(chunks[(r - 1 - k) % n], src=r, dst=right, tag=tag(("s", k)))
-        other = yield w.irecv(src=left, dst=r, tag=tag(("s", k)))
-        i = (r - 2 - k) % n
-        chunks[i] = op(chunks[i], other)
-    for k in range(n - 1):          # allgather the reduced chunks
-        w.isend(chunks[(r - k) % n], src=r, dst=right, tag=tag(("g", k)))
-        other = yield w.irecv(src=left, dst=r, tag=tag(("g", k)))
-        chunks[(r - k - 1) % n] = other
-    return np.concatenate(chunks).reshape(arr.shape)
-
-
-def _allreduce_doubling(w: tac.CommWorld, n: int, r: int, tag, value, op):
-    """Recursive doubling with the fold/unfold trick for non-power-of-two
-    rank counts: the ``rem = n - 2^⌊log2 n⌋`` odd ranks below ``2*rem``
-    fold into their even partners, the power-of-two remainder runs the
-    butterfly, results are unfolded back."""
-    acc = np.asarray(value)
-    pow2 = 1 << (n.bit_length() - 1)
-    rem = n - pow2
-    if r < 2 * rem:
-        if r % 2:
-            w.isend(acc, src=r, dst=r - 1, tag=tag("fold"))
-            result = yield w.irecv(src=r - 1, dst=r, tag=tag("unfold"))
-            return result
-        other = yield w.irecv(src=r + 1, dst=r, tag=tag("fold"))
-        acc = op(acc, other)
-        vr = r // 2
-    else:
-        vr = r - rem
-    mask = 1
-    while mask < pow2:
-        partner_vr = vr ^ mask
-        partner = partner_vr * 2 if partner_vr < rem else partner_vr + rem
-        w.isend(acc, src=r, dst=partner, tag=tag(("x", mask)))
-        other = yield w.irecv(src=partner, dst=r, tag=tag(("x", mask)))
-        acc = op(acc, other)
-        mask <<= 1
-    if r < 2 * rem:
-        w.isend(acc, src=r, dst=r + 1, tag=tag("unfold"))
-    return acc
-
-
-def _allgather_ring(w: tac.CommWorld, n: int, r: int, tag, value):
-    items: List[Any] = [None] * n
-    items[r] = value
-    right, left = (r + 1) % n, (r - 1) % n
-    for k in range(n - 1):
-        w.isend(items[(r - k) % n], src=r, dst=right, tag=tag(k))
-        items[(r - k - 1) % n] = yield w.irecv(src=left, dst=r, tag=tag(k))
-    return items
-
-
-def _allgather_bruck(w: tac.CommWorld, n: int, r: int, tag, value):
-    """Bruck allgather: ⌈log2 n⌉ rounds, any rank count."""
-    acc: List[Any] = [value]
-    k = 1
-    while k < n:
-        cnt = min(k, n - k)
-        w.isend(tuple(acc[:cnt]), src=r, dst=(r - k) % n, tag=tag(k))
-        got = yield w.irecv(src=(r + k) % n, dst=r, tag=tag(k))
-        acc.extend(got)
-        k <<= 1
-    # acc[j] is rank (r + j) % n's contribution
-    return [acc[(i - r) % n] for i in range(n)]
-
-
-def _reduce_scatter_ring(w: tac.CommWorld, n: int, r: int, tag, value, op):
-    chunks = list(np.array_split(np.asarray(value).reshape(-1), n))
-    right, left = (r + 1) % n, (r - 1) % n
-    for k in range(n - 1):
-        w.isend(chunks[(r - 1 - k) % n], src=r, dst=right, tag=tag(k))
-        other = yield w.irecv(src=left, dst=r, tag=tag(k))
-        i = (r - 2 - k) % n
-        chunks[i] = op(chunks[i], other)
-    return chunks[r]
-
-
-def _reduce_scatter_doubling(w: tac.CommWorld, n: int, r: int, tag, value,
-                             op):
-    # Recursive-halving needs a power-of-two block mapping that clashes
-    # with n-way output blocks; run the doubling allreduce and slice — the
-    # same logarithmic round structure, trade payload for simplicity.
-    full = yield from _allreduce_doubling(w, n, r, tag, value, op)
-    return np.array_split(np.asarray(full).reshape(-1), n)[r]
-
-
-def _alltoall_pairwise(w: tac.CommWorld, n: int, r: int, tag, blocks):
-    result: List[Any] = [None] * n
-    result[r] = blocks[r]
-    for k in range(1, n):
-        dst, src = (r + k) % n, (r - k) % n
-        w.isend(blocks[dst], src=r, dst=dst, tag=tag(k))
-        result[src] = yield w.irecv(src=src, dst=r, tag=tag(k))
-    return result
-
-
-def _alltoall_bruck(w: tac.CommWorld, n: int, r: int, tag, blocks):
-    """Bruck all-to-all: rotate, ⌈log2 n⌉ bit-rounds, inverse rotate."""
-    tmp = [blocks[(r + j) % n] for j in range(n)]
-    k = 1
-    while k < n:
-        idxs = [j for j in range(n) if j & k]
-        w.isend(tuple(tmp[j] for j in idxs), src=r, dst=(r + k) % n,
-                tag=tag(k))
-        got = yield w.irecv(src=(r - k) % n, dst=r, tag=tag(k))
-        for j, g in zip(idxs, got):
-            tmp[j] = g
-        k <<= 1
-    return [tmp[(r - i) % n] for i in range(n)]
-
-
-def _opp(direction):
-    dim, disp = direction
-    return (dim, -disp)
-
-
-def _neighbor_round(comm, rank: int, tag, dirs, sends):
-    """One neighbourhood round: isend per outgoing direction, one batched
-    wait on the irecvs of all incoming directions.
-
-    ``dirs`` is the rank's persistent neighbour list ``[((dim, ±1),
-    neighbour)]``; messages are tagged by their direction of *travel*, so
-    the sender in direction ``d`` matches the receiver expecting traffic
-    from its ``-d`` neighbour.  Returns ``{direction: payload received
-    from the neighbour in that direction}``.
+    The host-side (Level A) consumer of the schedule IR: ops run in
+    program order; ``Recv`` posts the ``irecv`` immediately (eager
+    matching), and the generator only *yields* — a single handle or a
+    batched list — when an op actually reads a buffer that is still in
+    flight.  The same generator therefore serves all three drivers
+    (inline PMPI waits, the blocking-mode progress engine, the event-bound
+    progress engine) and any communicator with ``isend``/``irecv`` —
+    world, sub-group, or Cartesian group, whose namespaced tags and rank
+    translation apply transparently.
     """
-    for d, nbr in dirs:
-        comm.isend(sends[d], src=rank, dst=nbr, tag=tag(("n", d)))
-    handles = [comm.irecv(src=nbr, dst=rank, tag=tag(("n", _opp(d))))
-               for d, nbr in dirs]
-    got = yield handles
-    return {d: v for (d, _), v in zip(dirs, got)}
+    if not 0 <= rank < sched.n:
+        raise ValueError(f"rank {rank} out of range for n={sched.n}")
+    env, shape = _bind_inputs(sched, value, blocks, sends)
+    pending: Dict[Any, Any] = {}    # buffer -> in-flight irecv handle
+
+    def _reads_of(o):
+        return [b for b in o.reads if b in pending]
+
+    for o in sched.programs[rank]:
+        needed = _reads_of(o)
+        if len(needed) == 1:
+            env[needed[0]] = yield pending.pop(needed[0])
+        elif needed:
+            handles = [pending.pop(b) for b in needed]
+            vals = yield handles
+            for b, v in zip(needed, vals):
+                env[b] = v
+        if isinstance(o, Send):
+            comm.isend(env[o.buf], src=rank, dst=o.peer, tag=tag(o.tag))
+        elif isinstance(o, Recv):
+            pending[o.buf] = comm.irecv(src=o.peer, dst=rank,
+                                        tag=tag(o.tag))
+        elif isinstance(o, Combine):
+            env[o.out] = op(env[o.a], env[o.b])
+        elif isinstance(o, Copy):
+            env[o.out] = env[o.src]
+        elif isinstance(o, Pack):
+            env[o.out] = tuple(env[p] for p in o.parts)
+        elif isinstance(o, Unpack):
+            for b, v in zip(o.outs, env[o.src]):
+                env[b] = v
+        elif isinstance(o, Slice):
+            flat = np.asarray(env[o.src]).reshape(-1)
+            env[o.out] = np.array_split(flat, o.parts)[o.index]
+        elif isinstance(o, Const):
+            env[o.out] = o.value
+        else:                       # pragma: no cover - new op kinds
+            raise TypeError(f"cannot interpret op {o!r}")
+    if pending:
+        # Completion requires every posted receive (a collective may not
+        # finish before its incoming rounds do — barrier semantics).
+        bufs = list(pending)
+        if len(bufs) == 1:
+            env[bufs[0]] = yield pending.pop(bufs[0])
+        else:
+            vals = yield [pending.pop(b) for b in bufs]
+            for b, v in zip(bufs, vals):
+                env[b] = v
+
+    kind = sched.output_kind
+    if kind == "none":
+        return None
+    if kind == "buf":
+        out = sched.out_bufs[rank]
+        return None if out is None else env[out]
+    if kind == "concat":
+        flat = np.concatenate([env[c] for c in sched.chunk_bufs])
+        return flat.reshape(shape)
+    if kind == "list":
+        return [env[("g", i)] for i in range(sched.n)]
+    if kind == "dirs":
+        return {d: env[("rv", d)] for d in sched.out_dirs[rank]}
+    raise ValueError(f"unknown output kind {kind!r}")  # pragma: no cover
+
+
+def _payload_nbytes(value) -> int:
+    """Per-rank payload size for ``algorithm="auto"`` (reductions only —
+    their element-wise semantics make the size identical on all ranks,
+    so every rank resolves the same schedule)."""
+    try:
+        return 0 if value is None else np.asarray(value).nbytes
+    except Exception:               # noqa: BLE001 - opaque payloads
+        return 0
 
 
 # Per-op default algorithm, shared by the per-rank methods and run_group:
@@ -578,23 +504,6 @@ _DEFAULT_ALGORITHM = {
     "barrier": "doubling", "bcast": "doubling", "reduce": "doubling",
     "allreduce": "ring", "allgather": "ring", "reduce_scatter": "ring",
     "alltoall": "ring",
-}
-
-_SCHEDULES = {
-    ("barrier", "doubling"): _barrier_dissemination,
-    ("barrier", "ring"): _barrier_ring,
-    ("bcast", "doubling"): _bcast_tree,
-    ("bcast", "ring"): _bcast_chain,
-    ("reduce", "doubling"): _reduce_tree,
-    ("reduce", "ring"): _reduce_chain,
-    ("allreduce", "doubling"): _allreduce_doubling,
-    ("allreduce", "ring"): _allreduce_ring,
-    ("allgather", "doubling"): _allgather_bruck,
-    ("allgather", "ring"): _allgather_ring,
-    ("reduce_scatter", "doubling"): _reduce_scatter_doubling,
-    ("reduce_scatter", "ring"): _reduce_scatter_ring,
-    ("alltoall", "doubling"): _alltoall_bruck,
-    ("alltoall", "ring"): _alltoall_pairwise,
 }
 
 
@@ -621,11 +530,19 @@ class Collectives:
     round); ``mode="event"`` returns a :class:`CollectiveHandle` bound to
     the calling task's event counter — consume ``handle.result`` from a
     successor task.
+
+    ``alpha``/``beta``/``gamma`` parameterise the α-β cost model used by
+    ``algorithm="auto"`` (and by :meth:`predict`): per-message latency,
+    wire seconds per byte, combine seconds per byte.
     """
 
-    def __init__(self, comm) -> None:
+    def __init__(self, comm, *, alpha: float = 1e-6, beta: float = 1e-9,
+                 gamma: float = 0.0) -> None:
         self.comm = comm
         self.world = comm   # historical alias (pre-sub-communicator name)
+        self.alpha = alpha
+        self.beta = beta
+        self.gamma = gamma
         self._seq = [itertools.count() for _ in range(comm.size)]
 
     # -- plumbing ----------------------------------------------------------
@@ -636,29 +553,69 @@ class Collectives:
             return ("coll", name, key, sub)
         return tag
 
+    # Ops whose payload size is identical on every rank by the collective's
+    # semantics (element-wise reductions; barrier is size-free).  Only
+    # these may pick the schedule from the local payload: for
+    # bcast/allgather/alltoall the local sizes can legitimately differ
+    # across ranks (non-root bcast callers pass None, gathers may be
+    # ragged), and a size-dependent choice would hand different ranks
+    # different schedules — a mismatch stall.
+    _UNIFORM_PAYLOAD = ("barrier", "reduce", "allreduce", "reduce_scatter")
+
+    def _resolve(self, name: str, algorithm: Optional[str],
+                 segments: int = 1, root: int = 0, value=None,
+                 nbytes: Optional[int] = None) -> Schedule:
+        """Algorithm/segment resolution -> the (cached) schedule object."""
+        algorithm = _norm_alg(algorithm or _DEFAULT_ALGORITHM[name])
+        if algorithm == "auto":
+            if name not in self._UNIFORM_PAYLOAD:
+                # size can differ per rank: fall back to the deterministic
+                # per-op default so all ranks agree on the schedule.
+                algorithm = _DEFAULT_ALGORITHM[name]
+            else:
+                if nbytes is None:
+                    nbytes = _payload_nbytes(value)
+                return schedule_ir.best_schedule(
+                    name, self.comm.size, nbytes, alpha=self.alpha,
+                    beta=self.beta, gamma=self.gamma, root=root)
+        return schedule_ir.build(name, algorithm, self.comm.size,
+                                 root=root, segments=segments)
+
     def _schedule(self, name: str, algorithm: str, rank: int, key: Any,
-                  *args):
-        n = self.world.size
+                  *, segments: int = 1, root: int = 0, value=None,
+                  op=None, blocks=None):
+        n = self.comm.size
         if not 0 <= rank < n:
             raise ValueError(f"rank {rank} out of range for size {n}")
-        fn = _SCHEDULES[(name, _norm_alg(algorithm))]
-        return fn(self.world, n, rank, self._tagger(name, rank, key), *args)
+        sched = self._resolve(name, algorithm, segments, root, value)
+        return _interpret(sched, self.comm, rank,
+                          self._tagger(name, rank, key),
+                          value=value, op=op, blocks=blocks)
 
     def _run(self, name: str, algorithm: Optional[str], rank: int,
-             key: Any, mode: str, *args):
+             key: Any, mode: str, **kw):
         # Normalize/validate EVERYTHING before _schedule consumes the
         # per-rank tag sequence — a rejected call must not desynchronize
         # this rank's subsequent keyless collectives from its peers.
         mode = _norm_mode(mode)
-        algorithm = algorithm or _DEFAULT_ALGORITHM[name]
+        if algorithm is not None:
+            _norm_alg(algorithm)
         return _execute_schedule(
-            self._schedule(name, algorithm, rank, key, *args), mode)
+            self._schedule(name, algorithm, rank, key, **kw), mode)
+
+    def predict(self, name: str, nbytes: int, *,
+                algorithm: Optional[str] = None,
+                segments: int = 1) -> float:
+        """Predicted seconds for one collective under the α-β model
+        (``algorithm="auto"`` resolves for the given ``nbytes``)."""
+        sched = self._resolve(name, algorithm, segments, nbytes=nbytes)
+        return sched.cost(self.alpha, self.beta, nbytes, gamma=self.gamma)
 
     # -- the seven collectives ---------------------------------------------
     # algorithm=None picks the per-op default from _DEFAULT_ALGORITHM
     # (latency-optimal doubling for the rooted/small ops, bandwidth-optimal
     # ring for the bulk ones) — shared with run_group so the two entry
-    # points can never drift apart.
+    # points can never drift apart.  algorithm="auto" picks by α-β cost.
     def barrier(self, *, rank: int, algorithm: Optional[str] = None,
                 mode: str = "blocking", key: Any = None):
         return self._run("barrier", algorithm, rank, key, mode)
@@ -666,25 +623,35 @@ class Collectives:
     def bcast(self, value: Any = None, *, rank: int, root: int = 0,
               algorithm: Optional[str] = None, mode: str = "blocking",
               key: Any = None):
-        return self._run("bcast", algorithm, rank, key, mode, value, root)
+        return self._run("bcast", algorithm, rank, key, mode,
+                         value=value, root=root)
 
     def reduce(self, value: Any, *, rank: int, op="sum", root: int = 0,
                algorithm: Optional[str] = None, mode: str = "blocking",
                key: Any = None):
         return self._run("reduce", algorithm, rank, key, mode,
-                         np.asarray(value), _op_fn(op), root)
+                         value=np.asarray(value), op=_op_fn(op), root=root)
 
     def allreduce(self, value: Any, *, rank: int, op="sum",
                   algorithm: Optional[str] = None, mode: str = "blocking",
-                  key: Any = None):
+                  key: Any = None, segments: int = 1):
+        """``segments > 1`` runs the pipelined ring allreduce (combine of
+        segment *k* overlaps transport of segment *k+1*)."""
+        if segments > 1:
+            algorithm = algorithm or "ring"
+            if _norm_alg(algorithm) != "ring":
+                raise ValueError("segmented allreduce requires the ring "
+                                 "algorithm")
         return self._run("allreduce", algorithm, rank, key, mode,
-                         np.asarray(value), _op_fn(op))
+                         value=np.asarray(value), op=_op_fn(op),
+                         segments=segments)
 
     def allgather(self, value: Any, *, rank: int,
                   algorithm: Optional[str] = None, mode: str = "blocking",
                   key: Any = None):
         """Returns the list of every rank's contribution, rank order."""
-        return self._run("allgather", algorithm, rank, key, mode, value)
+        return self._run("allgather", algorithm, rank, key, mode,
+                         value=value)
 
     def reduce_scatter(self, value: Any, *, rank: int, op="sum",
                        algorithm: Optional[str] = None,
@@ -692,7 +659,7 @@ class Collectives:
         """Returns this rank's ``np.array_split`` chunk of the flattened
         element-wise reduction."""
         return self._run("reduce_scatter", algorithm, rank, key, mode,
-                         np.asarray(value), _op_fn(op))
+                         value=np.asarray(value), op=_op_fn(op))
 
     def alltoall(self, blocks: Sequence[Any], *, rank: int,
                  algorithm: Optional[str] = None, mode: str = "blocking",
@@ -703,7 +670,8 @@ class Collectives:
         if len(blocks) != self.world.size:
             raise ValueError(f"alltoall needs exactly {self.world.size} "
                              f"blocks, got {len(blocks)}")
-        return self._run("alltoall", algorithm, rank, key, mode, blocks)
+        return self._run("alltoall", algorithm, rank, key, mode,
+                         blocks=blocks)
 
     # -- neighbourhood collectives (Cartesian communicators) ---------------
     def neighbor_alltoall(self, sends: Dict[Any, Any], *, rank: int,
@@ -718,12 +686,27 @@ class Collectives:
         non-periodic grid simply have fewer directions.
         """
         mode = _norm_mode(mode)
-        dirs = _topology_dirs(self.comm, rank)
-        sends = _check_dir_payloads(sends, dirs)
-        gen = _neighbor_round(self.comm, rank,
-                              self._tagger("neighbor_alltoall", rank, key),
-                              dirs, sends)
+        sched = _neighbor_schedule(self.comm)
+        sends = _check_dir_payloads(sends, sched.out_dirs[rank])
+        gen = _interpret(sched, self.comm, rank,
+                         self._tagger("neighbor_alltoall", rank, key),
+                         sends=sends)
         return _execute_schedule(gen, mode)
+
+    # -- persistent collectives (MPI_*_init analogue) ----------------------
+    def persistent(self, name: str, *, algorithm: Optional[str] = None,
+                   op="sum", root: int = 0,
+                   segments: int = 1) -> "PersistentCollective":
+        """Pre-build a collective schedule for repeated posting.
+
+        The ``MPI_Allreduce_init`` analogue made trivial by schedules
+        being data: the returned :class:`PersistentCollective` holds the
+        resolved schedule/operator and its own tag namespace; each
+        :meth:`PersistentCollective.start` re-posts it (per-rank sequence
+        numbers keep iterations apart, or pass ``key=iteration``).
+        """
+        return PersistentCollective(self, name, algorithm=algorithm,
+                                    op=op, root=root, segments=segments)
 
     # -- single-threaded group driver --------------------------------------
     def run_group(self, name: str, per_rank: Sequence[Dict[str, Any]],
@@ -750,7 +733,7 @@ class Collectives:
         "barrier": (set(), set()),
         "bcast": ({"value", "root"}, set()),
         "reduce": ({"value", "op", "root"}, {"value"}),
-        "allreduce": ({"value", "op"}, {"value"}),
+        "allreduce": ({"value", "op", "segments"}, {"value"}),
         "allgather": ({"value"}, {"value"}),
         "reduce_scatter": ({"value", "op"}, {"value"}),
         "alltoall": ({"blocks"}, {"blocks"}),
@@ -772,27 +755,108 @@ class Collectives:
         if missing:
             raise ValueError(f"{name}: missing argument(s) "
                              f"{sorted(missing)}")
-        algorithm = algorithm or _DEFAULT_ALGORITHM[name]
         if name == "barrier":
             return self._schedule(name, algorithm, rank, key)
         if name == "bcast":
             return self._schedule(name, algorithm, rank, key,
-                                  kw.get("value"), kw.get("root", 0))
+                                  value=kw.get("value"),
+                                  root=kw.get("root", 0))
         if name == "reduce":
             return self._schedule(name, algorithm, rank, key,
-                                  np.asarray(kw["value"]),
-                                  _op_fn(kw.get("op", "sum")),
-                                  kw.get("root", 0))
+                                  value=np.asarray(kw["value"]),
+                                  op=_op_fn(kw.get("op", "sum")),
+                                  root=kw.get("root", 0))
         if name in ("allreduce", "reduce_scatter"):
             return self._schedule(name, algorithm, rank, key,
-                                  np.asarray(kw["value"]),
-                                  _op_fn(kw.get("op", "sum")))
+                                  value=np.asarray(kw["value"]),
+                                  op=_op_fn(kw.get("op", "sum")),
+                                  segments=kw.get("segments", 1))
         if name == "allgather":
-            return self._schedule(name, algorithm, rank, key, kw["value"])
+            return self._schedule(name, algorithm, rank, key,
+                                  value=kw["value"])
         blocks = list(kw["blocks"])
         if len(blocks) != self.world.size:
             raise ValueError("alltoall block count != world size")
-        return self._schedule(name, algorithm, rank, key, blocks)
+        return self._schedule(name, algorithm, rank, key, blocks=blocks)
+
+
+# ---------------------------------------------------------------------------
+# Persistent collectives
+# ---------------------------------------------------------------------------
+_PERSISTENT_IDS = itertools.count()
+
+_REDUCING = {"reduce", "allreduce", "reduce_scatter"}
+
+
+class PersistentCollective:
+    """A pre-built schedule handle, re-postable every iteration.
+
+    The ``MPI_Allreduce_init`` analogue (ROADMAP item 5): the schedule —
+    algorithm, segment count, rank programs — is resolved once at
+    construction; every :meth:`start` binds fresh payloads and a fresh
+    tag context to the same immutable :class:`repro.core.schedule.Schedule`
+    and runs it in either interoperability mode.  Iteration isolation
+    comes from the per-rank sequence numbers (or an explicit
+    ``key=iteration``), exactly like the one-shot collectives.
+    """
+
+    def __init__(self, coll: Collectives, name: str, *,
+                 algorithm: Optional[str] = None, op="sum", root: int = 0,
+                 segments: int = 1) -> None:
+        algorithm = _norm_alg(algorithm or _DEFAULT_ALGORITHM[name])
+        if algorithm == "auto":
+            raise ValueError('algorithm="auto" is not valid for persistent '
+                             'collectives (the schedule is fixed at init); '
+                             'pick via Collectives.predict or pass '
+                             '"ring"/"doubling"')
+        self.coll = coll
+        self.name = name
+        self.sched = schedule_ir.build(name, algorithm, coll.comm.size,
+                                       root=root, segments=segments)
+        self.op = _op_fn(op) if name in _REDUCING else None
+        self._id = next(_PERSISTENT_IDS)
+        self._seq = [itertools.count() for _ in range(coll.comm.size)]
+
+    def _tagger(self, rank: int, key: Any):
+        if key is None:
+            key = next(self._seq[rank])
+
+        def tag(sub: Any):
+            return ("pers", self._id, key, sub)
+        return tag
+
+    def _gen(self, rank: int, key: Any, value, blocks):
+        if not 0 <= rank < self.sched.n:
+            raise ValueError(f"rank {rank} out of range for n="
+                             f"{self.sched.n}")
+        if self.sched.input_kind == "blocks" and blocks is None:
+            blocks = list(value) if value is not None else None
+        return _interpret(self.sched, self.coll.comm, rank,
+                          self._tagger(rank, key), value=value,
+                          op=self.op, blocks=blocks)
+
+    def start(self, value: Any = None, *, rank: int,
+              mode: str = "blocking", key: Any = None,
+              blocks: Optional[Sequence[Any]] = None):
+        """Post this rank's pre-built schedule; same mode contract as the
+        one-shot collectives."""
+        return _execute_schedule(self._gen(rank, key, value, blocks),
+                                 _norm_mode(mode))
+
+    def run_group(self, per_rank_values: Sequence[Any],
+                  key: Any = None) -> List[Any]:
+        """All ranks round-robin on the calling thread (test/'pure' path)."""
+        if len(per_rank_values) != self.sched.n:
+            raise ValueError(f"need values for all {self.sched.n} ranks")
+        machines = [_Machine(self._gen(r, key, v, None), CollectiveHandle())
+                    for r, v in enumerate(per_rank_values)]
+        _drive_group(machines)
+        return [m.handle.result for m in machines]
+
+    def cost(self, nbytes: int) -> float:
+        """Predicted seconds per posting under the owner's α-β model."""
+        return self.sched.cost(self.coll.alpha, self.coll.beta, nbytes,
+                               gamma=self.coll.gamma)
 
 
 # ---------------------------------------------------------------------------
@@ -807,9 +871,30 @@ def _topology_dirs(comm, rank: int):
     return tuple(neighbor_dirs(rank))
 
 
+def _neighbor_schedule(comm) -> Schedule:
+    """The neighbourhood schedule of a Cartesian communicator.
+
+    Memoised on the communicator itself (topologies are immutable), so
+    per-rank postings don't rebuild/re-hash the O(size) topology tuple;
+    ``build_neighbor``'s cache additionally shares one schedule object
+    across same-shape grids.
+    """
+    sched = getattr(comm, "_neighbor_sched", None)
+    if sched is None:
+        topology = getattr(comm, "topology", None)
+        if topology is None:
+            raise TypeError(
+                "neighbourhood collectives need a communicator with a "
+                "Cartesian topology — build one with CommWorld.cart_create")
+        sched = schedule_ir.build_neighbor(topology())
+        comm._neighbor_sched = sched
+    return sched
+
+
 def _check_dir_payloads(sends, dirs):
+    """``dirs`` is the rank's direction tuple (``Schedule.out_dirs[r]``)."""
     sends = dict(sends)
-    expected = {d for d, _ in dirs}
+    expected = set(dirs)
     if set(sends) != expected:
         raise ValueError(
             f"send payloads must cover exactly this rank's neighbour "
@@ -824,11 +909,12 @@ class HaloExchange:
     """Persistent halo exchange over a Cartesian group (paper §7.1 pattern).
 
     The neighbourhood analogue of MPI's persistent collectives: the
-    per-rank neighbour lists — one ``(dim, ±1)`` direction per grid edge,
-    from :meth:`tac.CartGroup.neighbor_dirs` — are computed once at
-    construction.  Each :meth:`start` then posts one ``isend`` per
-    outgoing direction and one ``irecv`` per incoming direction through
-    the communicator and runs the round in either interoperability mode:
+    schedule — one ``Send``/``Recv`` pair per grid edge, from
+    :meth:`tac.CartGroup.topology` — is built once at construction
+    (:func:`repro.core.schedule.build_neighbor`; grids of equal shape
+    share the cached object).  Each :meth:`start` re-posts one rank's
+    program through the communicator and runs it in either
+    interoperability mode:
 
     * ``mode="blocking"`` (§6.1) returns ``{direction: halo received from
       that neighbour}``; inside a task the wait pauses (one pause, rounds
@@ -846,6 +932,7 @@ class HaloExchange:
 
     def __init__(self, cart) -> None:
         self.cart = cart
+        self.sched = _neighbor_schedule(cart)
         self.dirs = {r: _topology_dirs(cart, r) for r in range(cart.size)}
         self._seq = [itertools.count() for _ in range(cart.size)]
         self._id = next(_HALO_IDS)
@@ -862,17 +949,16 @@ class HaloExchange:
             return ("halo", self._id, key, sub)
         return tag
 
-    def _schedule(self, rank: int, key: Any, sends):
-        dirs = self.dirs[rank]
-        sends = _check_dir_payloads(sends, dirs)
-        return _neighbor_round(self.cart, rank, self._tagger(rank, key),
-                               dirs, sends)
+    def _gen(self, rank: int, key: Any, sends):
+        sends = _check_dir_payloads(sends, self.sched.out_dirs[rank])
+        return _interpret(self.sched, self.cart, rank,
+                          self._tagger(rank, key), sends=sends)
 
     def start(self, sends: Dict[Any, Any], *, rank: int,
               mode: str = "event", key: Any = None):
         """Post this rank's halo round; see the class docstring for modes."""
         mode = _norm_mode(mode)
-        return _execute_schedule(self._schedule(rank, key, sends), mode)
+        return _execute_schedule(self._gen(rank, key, sends), mode)
 
     def exchange(self, sends: Dict[Any, Any], *, rank: int,
                  key: Any = None):
@@ -887,7 +973,7 @@ class HaloExchange:
         if len(per_rank_sends) != self.cart.size:
             raise ValueError(f"need send dicts for all {self.cart.size} "
                              f"ranks")
-        machines = [_Machine(self._schedule(r, key, s), CollectiveHandle())
+        machines = [_Machine(self._gen(r, key, s), CollectiveHandle())
                     for r, s in enumerate(per_rank_sends)]
         _drive_group(machines)
         return [m.handle.result for m in machines]
@@ -902,8 +988,9 @@ class HierarchicalCollectives:
     The first consumer of :meth:`tac.CommWorld.split`: construction runs
     the split collective — consecutive ranks share ``color = rank //
     group_size`` — and gathers the per-color *intra* groups plus a
-    *leaders* group of each color's rank 0.  An allreduce is then the
-    classic fat-node shape:
+    *leaders* group of each color's rank 0.  An allreduce composes THREE
+    schedules from the IR (rank translation via the
+    :meth:`tac.CommGroup.group_rank` hooks):
 
     1. chain-reduce to the local leader inside each intra group (the ring
        family — bandwidth-optimal within a "node"),
@@ -925,7 +1012,11 @@ class HierarchicalCollectives:
         self.world = world
         self.group_size = group_size
         self.intra: List[tac.CommGroup] = [h.result for h in handles]
-        leader_ranks = sorted({g.world_rank(0) for g in self.intra})
+        # MPI_Group_translate_ranks: each intra group's local rank 0 in
+        # the world's numbering (the world's identity group_rank hook
+        # makes it a valid translation target like any CommGroup).
+        leader_ranks = sorted({r for g in self.intra
+                               for r in g.translate_many([0], world)})
         self.leaders = world.group(leader_ranks)
         self._seq = [itertools.count() for _ in range(world.size)]
 
@@ -938,17 +1029,25 @@ class HierarchicalCollectives:
         def tag(stage):
             return lambda sub: ("hier", key, stage, sub)
 
+        reduce_s = schedule_ir.build("reduce", "ring", intra.size)
+        leaders_s = schedule_ir.build("allreduce", "doubling",
+                                      self.leaders.size)
+        bcast_s = schedule_ir.build("bcast", "ring", intra.size)
+
         def gen():
-            acc = yield from _reduce_chain(intra, intra.size, lr,
-                                           tag("reduce"), np.asarray(value),
-                                           op, 0)
+            acc = yield from _interpret(reduce_s, intra, lr,
+                                        tag("reduce"),
+                                        value=np.asarray(value), op=op)
             if lr == 0:
-                li = self.leaders.group_rank(rank)
-                acc = yield from _allreduce_doubling(
-                    self.leaders, self.leaders.size, li, tag("leaders"),
-                    acc, op)
-            result = yield from _bcast_chain(intra, intra.size, lr,
-                                             tag("bcast"), acc, 0)
+                # rank translation across the nested groups: this rank is
+                # intra-local 0; its leaders-local number comes from
+                # MPI_Group_translate_ranks, not arithmetic.
+                li = intra.translate(0, self.leaders)
+                acc = yield from _interpret(leaders_s, self.leaders, li,
+                                            tag("leaders"), value=acc,
+                                            op=op)
+            result = yield from _interpret(bcast_s, intra, lr,
+                                           tag("bcast"), value=acc)
             return result
         return gen()
 
@@ -956,10 +1055,13 @@ class HierarchicalCollectives:
                   mode: str = "blocking", key: Any = None):
         mode = _norm_mode(mode)
         op = _op_fn(op)
-        if not 0 <= rank < self.world.size:
-            raise ValueError(f"rank {rank} out of range for size "
-                             f"{self.world.size}")
+        self.world.world_rank(rank)   # identity hook: validates the rank
         return _execute_schedule(self._schedule(rank, key, value, op), mode)
+
+    def persistent(self, *, op="sum") -> "PersistentHierarchical":
+        """Pre-resolve the three-stage composition for per-iteration
+        re-posting (the Gauss–Seidel residual's shape)."""
+        return PersistentHierarchical(self, _op_fn(op))
 
     def run_group(self, values: Sequence[Any], *, op="sum",
                   key: Any = None) -> List[Any]:
@@ -979,3 +1081,50 @@ class HierarchicalCollectives:
         deepest = max(g.size for g in self.intra)
         return (2 * (deepest - 1)
                 + n_rounds("allreduce", "doubling", self.leaders.size))
+
+    def cost(self, alpha: float, beta: float, nbytes: int, *,
+             gamma: float = 0.0) -> float:
+        """α-β predicted seconds: the three stage costs on the critical
+        path (deepest intra group; payload does not shrink)."""
+        deepest = max(g.size for g in self.intra)
+        stages = (schedule_ir.build("reduce", "ring", deepest),
+                  schedule_ir.build("allreduce", "doubling",
+                                    self.leaders.size),
+                  schedule_ir.build("bcast", "ring", deepest))
+        return sum(s.cost(alpha, beta, nbytes, gamma=gamma)
+                   for s in stages)
+
+
+class PersistentHierarchical:
+    """Persistent handle over :class:`HierarchicalCollectives` — the
+    residual-allreduce shape posted once per solver iteration."""
+
+    def __init__(self, hier: HierarchicalCollectives, op: Callable) -> None:
+        self.hier = hier
+        self.op = op
+        self._id = next(_PERSISTENT_IDS)
+        self._seq = [itertools.count() for _ in range(hier.world.size)]
+        self._group_seq = itertools.count()
+
+    def start(self, value: Any, *, rank: int, mode: str = "blocking",
+              key: Any = None):
+        """Post one rank's residual round.  Implicit keys come from
+        per-rank counters (aligned as long as every rank posts the same
+        sequence — MPI's rule); group-driver postings use a disjoint
+        ``("g", n)`` namespace, so the two entry points never collide."""
+        if key is None:
+            key = ("r", next(self._seq[rank]))
+        return self.hier.allreduce(value, rank=rank, op=self.op,
+                                   mode=mode,
+                                   key=("pers-hier", self._id, key))
+
+    def run_group(self, values: Sequence[Any],
+                  key: Any = None) -> List[Any]:
+        if key is None:
+            key = ("g", next(self._group_seq))
+        return self.hier.run_group(values, op=self.op,
+                                   key=("pers-hier", self._id, key))
+
+    def cost(self, alpha: float, beta: float, nbytes: int, *,
+             gamma: float = 0.0) -> float:
+        return self.hier.cost(alpha, beta, nbytes, gamma=gamma)

@@ -1,0 +1,226 @@
+"""Level-B executor: lower schedule IR to in-graph XLA collectives.
+
+The second consumer of :mod:`repro.core.schedule` (the first is the host
+interpreter in :mod:`repro.core.collectives`): the SAME schedule object
+that the host progress engine interprets op-by-op is mapped here onto
+JAX primitives inside ``shard_map``-manual regions, where "task
+dependencies" are HLO dataflow edges and "the scheduler" is XLA's
+latency-hiding scheduler.
+
+Three lowering strategies, chosen by the schedule:
+
+* **Explicit rounds** — ring (any rank count, any segment count) and
+  recursive-doubling (power-of-two rank counts) allreduces become
+  ``lax.ppermute`` rounds whose count and order mirror the schedule's
+  transfer structure exactly (``2(n-1)·S`` ring rounds, ``log2 n``
+  butterfly rounds; asserted against ``Schedule`` op counts in tests).
+  Segmented schedules emit independent per-segment round chains with no
+  artificial dependencies between them, so XLA overlaps the combine of
+  segment *k* with the transport of segment *k+1* — the in-graph
+  realisation of the pipelined schedule.
+
+* **Fused node** — ``algorithm="native"`` lowers the whole allreduce to
+  one ``lax.psum``; XLA's own combiner picks the wire schedule.  This is
+  what :func:`repro.core.overlap.sync_grads` uses by default, which keeps
+  the bucketed/sentinel HLO (one ``all-reduce`` per bucket, same order)
+  byte-compatible with the pre-IR code.
+
+* **Neighbourhood** — a :func:`repro.core.schedule.build_neighbor`
+  schedule lowers to one ``ppermute`` per direction whose permutation
+  pairs are read straight off the schedule's transfers; ranks missing a
+  direction (non-periodic boundaries) simply have no pair and XLA
+  delivers zeros — which is how
+  :func:`repro.core.overlap.halo_exchange_rows` gets its zero boundary
+  halos without explicit masking.
+
+In-graph lowering restrictions (by construction of the substrate): the
+combining operator is addition (the gradient/residual case), payloads are
+dense arrays, and explicit-round lowerings run over ONE mesh axis
+(``native`` takes an axis tuple).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..compat import axis_size
+from . import schedule as schedule_ir
+from .schedule import Schedule, Send
+
+Axes = Union[str, Sequence[str]]
+
+
+def _single_axis(axis_name: Axes, what: str) -> str:
+    if isinstance(axis_name, str):
+        return axis_name
+    axes = tuple(axis_name)
+    if len(axes) != 1:
+        raise ValueError(f"{what} lowers over a single mesh axis, got "
+                         f"{axes}; use algorithm='native' for axis tuples")
+    return axes[0]
+
+
+def _check_world(sched: Schedule, axis_name: str) -> None:
+    n = axis_size(axis_name)
+    if sched.n != n:
+        raise ValueError(f"schedule is for {sched.n} ranks but axis "
+                         f"{axis_name!r} has {n} shards")
+
+
+def sends_per_rank(sched: Schedule) -> int:
+    """Transfer rounds each rank issues — the lowered ppermute count per
+    explicit-round leg (structural-equivalence hook for tests)."""
+    return max(sum(isinstance(op, Send) for op in prog)
+               for prog in sched.programs)
+
+
+# ---------------------------------------------------------------------------
+# Allreduce lowerings
+# ---------------------------------------------------------------------------
+def allreduce(x: jax.Array, axes: Axes, *,
+              algorithm: str = "native", segments: int = 1,
+              sched: Optional[Schedule] = None) -> jax.Array:
+    """Sum-allreduce ``x`` over ``axes`` with a chosen schedule.
+
+    ``algorithm="native"`` emits one fused ``lax.psum`` node (XLA picks
+    the rounds); ``"ring"``/``"doubling"`` build (or take) a schedule and
+    emit its explicit ppermute rounds.  Must be called inside
+    ``shard_map`` manual over ``axes``.
+    """
+    if sched is None and algorithm == "native":
+        return lax.psum(x, tuple(axes) if not isinstance(axes, str)
+                        else (axes,))
+    if sched is None:
+        axis = _single_axis(axes, f"allreduce[{algorithm}]")
+        sched = schedule_ir.build("allreduce", algorithm, axis_size(axis),
+                                  segments=segments)
+    return lower_allreduce(sched, x, axes)
+
+
+def lower_allreduce(sched: Schedule, x: jax.Array,
+                    axes: Axes) -> jax.Array:
+    """Lower an allreduce schedule to explicit in-graph rounds."""
+    if sched.name != "allreduce":
+        raise ValueError(f"expected an allreduce schedule, got "
+                         f"{sched.name!r}")
+    axis = _single_axis(axes, f"allreduce[{sched.algorithm}]")
+    _check_world(sched, axis)
+    if sched.n == 1:
+        return x
+    if sched.algorithm == "ring":
+        return _ring_allreduce(x, axis, sched.n, sched.segments)
+    if sched.algorithm == "doubling":
+        if sched.n & (sched.n - 1):
+            # fold/unfold needs rank-asymmetric control flow, which SPMD
+            # lowering cannot express — the fused node is the honest
+            # equivalent (same dataflow position, XLA picks the rounds).
+            return lax.psum(x, (axis,))
+        return _butterfly_allreduce(x, axis, sched.n)
+    raise ValueError(f"cannot lower algorithm {sched.algorithm!r}")
+
+
+def _ring_allreduce(x: jax.Array, axis: str, n: int,
+                    segments: int) -> jax.Array:
+    """Ring allreduce as ``2(n-1)·S`` explicit ppermute rounds.
+
+    Mirrors the host schedule chunk-for-chunk: reduce-scatter rounds send
+    chunk ``(r-1-k) % n`` and combine into ``(r-2-k) % n``; allgather
+    rounds forward chunk ``(r-k) % n``.  With ``segments=S > 1`` the
+    per-segment chains carry no cross-segment dependencies, so XLA's
+    scheduler overlaps segment ``k+1`` transport with segment ``k``
+    combine — the pipelined schedule at Level B.
+    """
+    idx = lax.axis_index(axis)
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    m = flat.shape[0]
+    pieces = n * segments
+    pad = (-m) % pieces
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(n, segments, -1)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    for k in range(n - 1):              # reduce-scatter leg
+        for s in range(segments):
+            src_c = (idx - 1 - k) % n
+            got = lax.ppermute(jnp.take(chunks[:, s], src_c, axis=0),
+                               axis, fwd)
+            tgt = (idx - 2 - k) % n
+            chunks = chunks.at[tgt, s].add(got)
+    for k in range(n - 1):              # allgather leg
+        for s in range(segments):
+            src_c = (idx - k) % n
+            got = lax.ppermute(jnp.take(chunks[:, s], src_c, axis=0),
+                               axis, fwd)
+            tgt = (idx - k - 1) % n
+            chunks = chunks.at[tgt, s].set(got)
+    out = chunks.reshape(-1)
+    if pad:
+        out = out[:m]
+    return out.reshape(orig_shape).astype(orig_dtype)
+
+
+def _butterfly_allreduce(x: jax.Array, axis: str, n: int) -> jax.Array:
+    """Recursive doubling as ``log2 n`` bidirectional ppermute rounds
+    (power-of-two rank counts)."""
+    acc = x
+    mask = 1
+    while mask < n:
+        perm = [(i, i ^ mask) for i in range(n)]
+        acc = acc + lax.ppermute(acc, axis, perm)
+        mask <<= 1
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Neighbourhood lowering
+# ---------------------------------------------------------------------------
+def lower_neighbor(sched: Schedule, sends: Dict[Any, jax.Array],
+                   axis_name: str) -> Dict[Any, jax.Array]:
+    """Lower a neighbourhood schedule to one ppermute per direction.
+
+    ``sends[d]`` is this shard's outgoing payload toward direction ``d``
+    (every shard passes the same dict — SPMD); the result maps each
+    direction to the payload received *from* the neighbour in that
+    direction.  The permutation pairs are read off the schedule's
+    transfers, so non-periodic boundary ranks — which have no pair —
+    receive ``ppermute``'s zeros: the halo zero-fill falls out of the
+    schedule structure instead of explicit masking.
+    """
+    if sched.output_kind != "dirs":
+        raise ValueError("lower_neighbor needs a neighbourhood schedule "
+                         "(build_neighbor)")
+    _check_world(sched, axis_name)
+    by_dir: Dict[Any, list] = {}
+    for t in sched.transfers():
+        _, d = t.src_buf            # ("s", direction)
+        by_dir.setdefault(d, []).append((t.src, t.dst))
+    out: Dict[Any, jax.Array] = {}
+    for d, payload in sends.items():
+        pairs = sorted(by_dir.get(d, []))
+        opp = (d[0], -d[1])
+        if not pairs:               # degenerate grid: no such edge at all
+            out[opp] = jnp.zeros_like(payload)
+            continue
+        out[opp] = lax.ppermute(payload, axis_name, pairs)
+    return out
+
+
+def chain_topology(n: int) -> Tuple[Tuple[Tuple[Tuple[int, int], int],
+                                          ...], ...]:
+    """1-D non-periodic chain topology (row decomposition), the shape
+    :meth:`repro.core.tac.CartGroup.topology` produces for
+    ``cart_create((n,))``."""
+    topo = []
+    for r in range(n):
+        dirs = []
+        if r > 0:
+            dirs.append(((0, -1), r - 1))
+        if r < n - 1:
+            dirs.append(((0, 1), r + 1))
+        topo.append(tuple(dirs))
+    return tuple(topo)

@@ -17,10 +17,22 @@ schedule construction: present the gradient synchronisation as
                  (``lax.optimization_barrier``), serialising them exactly
                  like the artificial sentinel dependency of paper §6.3/§7.1.
 
+Since the schedule-IR refactor this module is a thin wrapper over
+:mod:`repro.core.lowering`, the Level-B executor of the same
+:mod:`repro.core.schedule` IR the host progress engine interprets: each
+bucket's reduction is one schedule node — ``algorithm="native"`` (the
+default) lowers it to a fused ``lax.psum`` (identical HLO to the pre-IR
+code: one ``all-reduce`` per bucket, same order), while ``"ring"`` /
+``"doubling"`` lower the explicit ppermute rounds of the corresponding
+host schedule, including the segmented/pipelined ring
+(``segments > 1``).  ``halo_exchange_rows`` likewise executes the
+1-D neighbourhood schedule via :func:`repro.core.lowering.lower_neighbor`.
+
 These run inside ``jax.shard_map`` manual over the DP axes (the model axis
 stays auto/GSPMD).  Structural verification = collective count/order in the
 lowered HLO; benchmarks/overlap_bench.py measures wall time on the local
-mesh and EXPERIMENTS.md §Perf reports the roofline deltas.
+mesh plus the α-β predicted times, and EXPERIMENTS.md §Perf reports the
+roofline deltas.
 
 ``compress="bf16"`` halves the bytes on the wire (cast → reduce → cast), an
 orthogonal distributed-optimization trick.
@@ -28,13 +40,14 @@ orthogonal distributed-optimization trick.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..compat import axis_size
+from . import lowering
+from . import schedule as schedule_ir
 
 DEFAULT_BUCKET_BYTES = 4 << 20
 
@@ -46,15 +59,21 @@ def _flatten_with_sizes(grads):
     return leaves, treedef, shapes, sizes
 
 
-def _make_buckets(sizes: Sequence[int], bucket_bytes: int,
-                  bytes_per_el: int = 4) -> List[List[int]]:
-    """Greedy size-based bucketing of leaf indices (DDP-style)."""
+def _make_buckets(nbytes: Sequence[int],
+                  bucket_bytes: int) -> List[List[int]]:
+    """Greedy byte-based bucketing of leaf indices (DDP-style).
+
+    ``nbytes[i]`` is leaf i's byte count AS SENT (``size × wire-dtype
+    itemsize`` — bf16 buckets pack twice the element count of fp32, so
+    ``bucket_bytes`` bounds the actual message size; the old
+    4-bytes-per-element assumption over-fragmented narrow dtypes).
+    """
     buckets: List[List[int]] = []
     cur: List[int] = []
     acc = 0
-    for i, s in enumerate(sizes):
+    for i, b in enumerate(nbytes):
         cur.append(i)
-        acc += s * bytes_per_el
+        acc += b
         if acc >= bucket_bytes:
             buckets.append(cur)
             cur, acc = [], 0
@@ -63,17 +82,52 @@ def _make_buckets(sizes: Sequence[int], bucket_bytes: int,
     return buckets
 
 
+def _wire_dtype(leaf, compress: Optional[str], wire: str):
+    """The dtype a leaf travels (and accumulates) in.
+
+    Default ``wire="fp32"``: everything upcasts to fp32 — the safe
+    accumulation the pre-IR code always used (the repo's default model
+    dtype is bf16, so silently summing DP gradients in bf16 would be a
+    numerics regression).  ``wire="leaf"`` opts floating leaves into
+    their own dtype (a bf16 grad travels AND accumulates in bf16 — the
+    same trade ``compress="bf16"`` makes globally); integer dtypes always
+    upcast (a psum would overflow).  ``compress`` overrides both.
+    """
+    if compress == "bf16":
+        return jnp.dtype(jnp.bfloat16)
+    if compress is None and wire == "leaf" and \
+            jnp.issubdtype(leaf.dtype, jnp.floating):
+        return jnp.dtype(leaf.dtype)
+    return jnp.dtype(jnp.float32)
+
+
 def sync_grads(grads, *, axes, mode: str = "bucketed",
                bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-               compress: Optional[str] = None, mean: bool = True):
+               compress: Optional[str] = None, mean: bool = True,
+               algorithm: str = "native", segments: int = 1,
+               wire: str = "fp32"):
     """Reduce gradients over the (manual) DP axes with a chosen schedule.
 
-    Must be called inside ``shard_map`` manual over ``axes``.
+    Must be called inside ``shard_map`` manual over ``axes``.  ``mode``
+    picks the bucketing/ordering pattern (fused/bucketed/sentinel);
+    ``algorithm`` picks each bucket's wire schedule — ``"native"`` (one
+    fused all-reduce node, the default and the production path),
+    ``"ring"``/``"doubling"`` (explicit in-graph rounds lowered from the
+    schedule IR; single DP axis only), with ``segments > 1`` pipelining
+    the ring.
+
+    Wire dtype: by default every leaf travels and accumulates in fp32
+    (identical numerics to the pre-IR code in every mode); ``wire="leaf"``
+    opts floating leaves into their own dtype — halving bf16 wire bytes
+    at the cost of bf16 accumulation, the same trade ``compress="bf16"``
+    makes globally.  Buckets are dtype-grouped and sized by bytes AS
+    SENT, so ``bucket_bytes`` bounds the real message size under either
+    setting.  The wire rule is shared by all three modes, so mode
+    selection never changes numerics.
     """
     if isinstance(axes, str):
         axes = (axes,)
     leaves, treedef, shapes, sizes = _flatten_with_sizes(grads)
-    nshards = 1
     # psum over multiple axes: pass the tuple directly.
     axis_arg = tuple(axes)
 
@@ -85,34 +139,57 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
                 axis_size(axis_arg[0])  # sync_grads divides later
         if compress == "bf16":
             x = x.astype(jnp.bfloat16)
-        x = jax.lax.psum(x, axis_arg)
+        x = lowering.allreduce(x, axis_arg, algorithm=algorithm,
+                               segments=segments)
         return x.astype(jnp.float32)
 
+    if wire not in ("fp32", "leaf"):
+        raise ValueError(f"unknown wire dtype policy {wire!r}; "
+                         f"one of ['fp32', 'leaf']")
+    # Leaves group by their wire dtype in EVERY mode, so the per-leaf
+    # numerics are identical whichever mode is selected (under the fp32
+    # default that is one group with the exact pre-IR layout and HLO).
+    groups: Dict[Any, List[int]] = {}
+    for i, l in enumerate(leaves):
+        groups.setdefault(_wire_dtype(l, compress, wire), []).append(i)
+
     if mode == "fused":
-        flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1)
-                                for l in leaves])
-        flat = reduce_block(flat)
-        out, off = [], 0
-        for sh, sz in zip(shapes, sizes):
-            out.append(flat[off:off + sz].reshape(sh))
-            off += sz
+        # one collective per wire dtype (one total for uniform models) —
+        # the fork-join phase boundary.
+        out = [None] * len(leaves)
+        for wdt, idxs in groups.items():
+            flat = jnp.concatenate([leaves[i].astype(wdt).reshape(-1)
+                                    for i in idxs])
+            flat = reduce_block(flat)
+            off = 0
+            for i in idxs:
+                out[i] = flat[off:off + sizes[i]].reshape(shapes[i])
+                off += sizes[i]
     elif mode in ("bucketed", "sentinel"):
-        buckets = _make_buckets(sizes, bucket_bytes)
+        # dtype-homogeneous buckets (DDP-style): each group buckets
+        # greedily by bytes AS SENT, so ``bucket_bytes`` bounds the real
+        # message size — a bf16 bucket packs twice the elements of an
+        # fp32 one.
         reduced: List[Any] = [None] * len(leaves)
         token = None
-        for b in buckets:
-            chunk = jnp.concatenate(
-                [leaves[i].astype(jnp.float32).reshape(-1) for i in b])
-            if mode == "sentinel" and token is not None:
-                # Serialise on the previous collective — the artificial
-                # dependency the paper's technique removes.
-                chunk, _ = jax.lax.optimization_barrier((chunk, token))
-            chunk = reduce_block(chunk)
-            token = jnp.sum(chunk[:1])
-            off = 0
-            for i in b:
-                reduced[i] = chunk[off:off + sizes[i]].reshape(shapes[i])
-                off += sizes[i]
+        for wdt, idxs in groups.items():
+            itemsize = 1 if compress == "int8" else wdt.itemsize
+            nbytes = [sizes[i] * itemsize for i in idxs]
+            for b in _make_buckets(nbytes, bucket_bytes):
+                sel = [idxs[j] for j in b]
+                chunk = jnp.concatenate(
+                    [leaves[i].astype(wdt).reshape(-1) for i in sel])
+                if mode == "sentinel" and token is not None:
+                    # Serialise on the previous collective — the artificial
+                    # dependency the paper's technique removes.
+                    chunk, _ = jax.lax.optimization_barrier((chunk, token))
+                chunk = reduce_block(chunk)
+                token = jnp.sum(chunk[:1])
+                off = 0
+                for i in sel:
+                    reduced[i] = chunk[off:off + sizes[i]].reshape(
+                        shapes[i])
+                    off += sizes[i]
         out = reduced
     else:
         raise ValueError(f"unknown grad sync mode {mode!r}")
@@ -175,16 +252,18 @@ def halo_exchange_rows(x, axis_name: str, *, width: int = 1
     x: the local (rows, cols) block of a 1-D row decomposition.  Returns
     (top_halo, bottom_halo) received from the previous/next shard (zeros at
     the domain edges).  Inside shard_map manual over ``axis_name``.
+
+    Executes the 1-D non-periodic neighbourhood schedule — the same
+    :func:`repro.core.schedule.build_neighbor` IR the host-side
+    :class:`repro.core.collectives.HaloExchange` interprets — lowered to
+    one ppermute per direction; boundary ranks have no permutation pair,
+    so their halos arrive as ppermute's zeros.
     """
     n = axis_size(axis_name)
-    idx = jax.lax.axis_index(axis_name)
-    down = [(i, (i + 1) % n) for i in range(n)]   # send my last rows down
-    up = [(i, (i - 1) % n) for i in range(n)]     # send my first rows up
-    from_above = jax.lax.ppermute(x[-width:], axis_name, down)
-    from_below = jax.lax.ppermute(x[:width], axis_name, up)
-    top = jnp.where(idx == 0, jnp.zeros_like(from_above), from_above)
-    bot = jnp.where(idx == n - 1, jnp.zeros_like(from_below), from_below)
-    return top, bot
+    sched = schedule_ir.build_neighbor(lowering.chain_topology(n))
+    got = lowering.lower_neighbor(
+        sched, {(0, 1): x[-width:], (0, -1): x[:width]}, axis_name)
+    return got[(0, -1)], got[(0, 1)]
 
 
 def chained(x, token):

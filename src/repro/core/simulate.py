@@ -51,7 +51,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 COMPUTE = "compute"
 COMM_HELD = "comm-held"
@@ -299,3 +299,122 @@ class Simulator:
                          done_times={t.id: t.done_time for t in tasks},
                          busy_time=busy, held_wait_time=held,
                          max_paused=max_paused, resumes=resumes)
+
+
+# ---------------------------------------------------------------------------
+# Schedule-IR replay: one Schedule -> a SimTask graph
+# ---------------------------------------------------------------------------
+def schedule_tasks(sched, *, size: float, alpha: float, beta: float,
+                   gamma: float = 0.0, kind: str = COMM_EVENTS,
+                   base_id: int = 0, name_prefix: str = "") -> List[SimTask]:
+    """Expand a :class:`repro.core.schedule.Schedule` into a SimTask graph.
+
+    The discrete-event counterpart of :meth:`Schedule.cost`: each matched
+    Send/Recv pair becomes a comm task on the destination rank whose
+    external event arrives ``α + β·frac·size`` after the payload's
+    producer finishes; each ``Combine`` becomes a compute task of
+    ``γ·frac·size`` seconds occupying a worker — so with one worker per
+    rank, combines serialise per rank while independent transfers fly,
+    which is exactly what lets a segmented schedule's transport overlap
+    its combines.  Marshalling ops (Copy/Pack/Unpack/Slice/Const) carry
+    dependencies but no tasks.
+
+    ``kind`` picks the transfer tasks' waiting discipline (``comm-events``
+    by default — the event-bound collective; ``comm-paused`` /
+    ``comm-held`` model the blocking and sentinel-serialised runs).
+    Returns tasks with ids starting at ``base_id``; feed them to
+    :class:`Simulator` (``n_ranks=sched.n``), possibly merged with other
+    graphs.
+    """
+    from .schedule import Combine, Const, Copy, Pack, Recv, Send, Slice, \
+        Unpack
+
+    tasks: List[SimTask] = []
+    ids = itertools.count(base_id)
+
+    def new_task(rank, compute, kind_, name, start=(), events=()):
+        t = SimTask(next(ids), rank, compute, kind=kind_,
+                    start_deps=[(d, 0.0) for d in start],
+                    event_deps=list(events),
+                    name=f"{name_prefix}{name}")
+        tasks.append(t)
+        return t.id
+
+    # producers[r][buf] -> set of task ids whose completion makes buf ready
+    producers: List[Dict] = []
+    entry = []
+    for r in range(sched.n):
+        eid = new_task(r, 0.0, COMPUTE, f"in[{r}]")
+        entry.append(eid)
+        producers.append({b: {eid} for b in sched._initial_bufs(r)})
+
+    arrivals: Dict = {}     # transfer tag -> (deps of the sent payload)
+    pcs = [0] * sched.n
+    remaining = sum(len(p) for p in sched.programs)
+    while remaining:
+        progressed = False
+        for r in range(sched.n):
+            prog = sched.programs[r]
+            while pcs[r] < len(prog):
+                op = prog[pcs[r]]
+                deps = producers[r]
+                if isinstance(op, Recv):
+                    if op.tag not in arrivals:
+                        break
+                    lat = alpha + beta * op.frac * size
+                    cid = new_task(
+                        r, 0.0, kind, f"xfer:{op.tag}",
+                        events=[(d, lat) for d in arrivals[op.tag]])
+                    # proxy whose BODY completion == transfer completion,
+                    # so downstream event edges measure from the right
+                    # instant (event edges fire at body-done).
+                    pid = new_task(r, 0.0, COMPUTE, f"got:{op.tag}",
+                                   start=[cid])
+                    deps[op.buf] = {pid}
+                elif isinstance(op, Send):
+                    arrivals[op.tag] = frozenset(deps[op.buf])
+                elif isinstance(op, Combine):
+                    kid = new_task(r, gamma * op.frac * size, COMPUTE,
+                                   f"combine:{op.out}",
+                                   start=sorted(deps[op.a] | deps[op.b]))
+                    deps[op.out] = {kid}
+                elif isinstance(op, Copy):
+                    deps[op.out] = set(deps[op.src])
+                elif isinstance(op, Pack):
+                    merged: Set[int] = set()
+                    for p in op.parts:
+                        merged |= deps[p]
+                    deps[op.out] = merged
+                elif isinstance(op, Unpack):
+                    for o in op.outs:
+                        deps[o] = set(deps[op.src])
+                elif isinstance(op, Slice):
+                    deps[op.out] = set(deps[op.src])
+                elif isinstance(op, Const):
+                    deps[op.out] = {entry[r]}
+                else:           # pragma: no cover - new op kinds
+                    raise TypeError(f"cannot simulate op {op!r}")
+                pcs[r] += 1
+                remaining -= 1
+                progressed = True
+        if not progressed:
+            stuck = [r for r in range(sched.n)
+                     if pcs[r] < len(sched.programs[r])]
+            raise RuntimeError(f"schedule deadlock while expanding: "
+                               f"ranks {stuck} cannot progress")
+    return tasks
+
+
+def schedule_makespan(sched, *, size: float, alpha: float, beta: float,
+                      gamma: float = 0.0, kind: str = COMM_EVENTS,
+                      workers_per_rank: int = 1,
+                      task_overhead: float = 0.0,
+                      resume_overhead: float = 0.0) -> float:
+    """Discrete-event makespan of one schedule under the α-β(-γ) model —
+    the simulator-side twin of :meth:`Schedule.cost` (which is analytic
+    and additionally serialises send ports)."""
+    tasks = schedule_tasks(sched, size=size, alpha=alpha, beta=beta,
+                           gamma=gamma, kind=kind)
+    sim = Simulator(sched.n, workers_per_rank, task_overhead=task_overhead,
+                    resume_overhead=resume_overhead)
+    return sim.run(tasks).makespan

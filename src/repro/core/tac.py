@@ -258,6 +258,21 @@ class CommWorld:
     def ssend(self, payload: Any, *, src: int, dst: int, tag: Any = 0) -> None:
         wait(self.isend(payload, src=src, dst=dst, tag=tag, synchronous=True))
 
+    # -- rank-translation hooks ---------------------------------------------
+    # A CommWorld is its own trivial "group": these identity hooks let
+    # schedule-IR consumers (the host interpreter, the lowering, the
+    # hierarchical composition) translate communicator-local ranks
+    # uniformly without testing for CommGroup.
+    def world_rank(self, rank: int) -> int:
+        """Communicator-local rank -> world rank (identity for the world)."""
+        if not 0 <= rank < self.size:
+            raise ValueError(f"rank {rank} out of range for size {self.size}")
+        return rank
+
+    def group_rank(self, world_rank: int) -> Optional[int]:
+        """World rank -> communicator-local rank (identity for the world)."""
+        return world_rank if 0 <= world_rank < self.size else None
+
     # -- sub-communicators (MPI_Comm_split / MPI_Comm_group / Cart) ---------
     def group(self, ranks: Sequence[int]) -> "CommGroup":
         """A sub-communicator over ``ranks`` (group-local order as given).
@@ -377,6 +392,11 @@ class CommGroup:
     def translate(self, rank: int, other: "CommGroup") -> Optional[int]:
         """This group's ``rank`` in ``other``'s numbering (None if absent)."""
         return other.group_rank(self.world_rank(rank))
+
+    def translate_many(self, ranks: Sequence[int],
+                       other: "CommGroup") -> List[Optional[int]]:
+        """MPI_Group_translate_ranks: batch :meth:`translate`."""
+        return [self.translate(r, other) for r in ranks]
 
     # -- point-to-point (group-local ranks, namespaced tags) ----------------
     def _check(self, rank: int) -> None:
@@ -498,6 +518,16 @@ class CartGroup(CommGroup):
     def neighbors(self, rank: int) -> List[int]:
         """Neighbour group ranks in ``neighbor_dirs`` order."""
         return [nbr for _, nbr in self.neighbor_dirs(rank)]
+
+    def topology(self) -> Tuple[Tuple[Tuple[Tuple[int, int], int], ...], ...]:
+        """All ranks' neighbour lists as one hashable tuple.
+
+        ``topology()[r] == tuple(neighbor_dirs(r))`` — the value that keys
+        the cached neighbourhood schedule
+        (:func:`repro.core.schedule.build_neighbor`): two grids of the
+        same shape share one schedule object.
+        """
+        return tuple(tuple(self.neighbor_dirs(r)) for r in range(self.size))
 
 
 # ---------------------------------------------------------------------------

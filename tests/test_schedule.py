@@ -1,0 +1,344 @@
+"""Schedule-IR tests: structure, cost model, selection, persistence.
+
+The tentpole's acceptance criteria live here: (a) every collective ×
+algorithm builds a structurally valid schedule whose critical-path rounds
+equal the closed-form latency model the simulator always used; (b) the
+host interpreter executes segmented schedules to the same result as
+unsegmented ones; (c) under the α-β(-γ) cost model — analytic AND
+discrete-event — a segmented ring allreduce strictly beats the
+unsegmented one for large payloads; (d) α-β selection picks the
+latency-optimal algorithm for small payloads and the bandwidth-optimal
+(segmented) one for large.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import schedule as schedule_ir
+from repro.core import simulate
+from repro.core import tac
+from repro.core.collectives import (Collectives, HaloExchange,
+                                    HierarchicalCollectives,
+                                    PersistentCollective, n_rounds)
+from repro.core.schedule import Recv, Send, build, build_neighbor, \
+    best_schedule
+
+RANKS = (1, 2, 3, 4, 5, 7, 8)
+ALPHA, BETA, GAMMA = 5e-6, 1e-9, 4e-10
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", schedule_ir.COLLECTIVES)
+@pytest.mark.parametrize("alg", schedule_ir.ALGORITHMS)
+@pytest.mark.parametrize("n", RANKS)
+def test_build_validates_and_matches_closed_form_rounds(name, alg, n):
+    sched = build(name, alg, n)
+    sched.validate()                      # idempotent structural check
+    assert sched.n == n
+    assert sched.rounds == n_rounds(name, alg, n)
+
+
+@pytest.mark.parametrize("n", (2, 3, 5, 8))
+def test_transfers_are_matched_pairs(n):
+    for name in schedule_ir.COLLECTIVES:
+        for alg in schedule_ir.ALGORITHMS:
+            sched = build(name, alg, n)
+            sends = sum(isinstance(o, Send) for p in sched.programs
+                        for o in p)
+            recvs = sum(isinstance(o, Recv) for p in sched.programs
+                        for o in p)
+            assert sends == recvs == len(sched.transfers())
+
+
+def test_schedules_are_cached_data():
+    a = build("allreduce", "ring", 8)
+    b = build("allreduce", "ring", 8)
+    assert a is b                          # immutable, shared
+    assert build("allreduce", "ring", 8, segments=2) is not a
+
+
+def test_build_rejects_bad_arguments():
+    with pytest.raises(ValueError):
+        build("allreduce", "butterfly", 4)
+    with pytest.raises(ValueError):
+        build("gather", "ring", 4)
+    with pytest.raises(ValueError):
+        build("bcast", "ring", 4, root=4)
+    with pytest.raises(ValueError):
+        build("bcast", "ring", 4, segments=2)   # only ring allreduce
+    with pytest.raises(ValueError):
+        build("allreduce", "ring", 0)
+
+
+@pytest.mark.parametrize("n,segments", [(4, 2), (5, 3), (8, 4)])
+def test_segmented_ring_structure(n, segments):
+    sched = build("allreduce", "ring", n, segments=segments)
+    sched.validate()
+    counts = sched.counts()
+    # 2(n-1) rounds × S segments × n ranks transfers; combines only on
+    # the reduce-scatter leg.
+    assert counts["Send"] == 2 * (n - 1) * segments * n
+    assert counts["Combine"] == (n - 1) * segments * n
+
+
+def test_neighbor_schedule_matches_topology():
+    world = tac.CommWorld(6)
+    cart = world.cart_create((2, 3))
+    sched = build_neighbor(cart.topology())
+    # one transfer per directed grid edge
+    n_edges = sum(len(cart.neighbor_dirs(r)) for r in range(6))
+    assert len(sched.transfers()) == n_edges
+    assert sched.out_dirs[0] == tuple(d for d, _ in cart.neighbor_dirs(0))
+    # same-shape grids share the cached schedule object
+    cart2 = tac.CommWorld(8).cart_create((2, 3))
+    assert build_neighbor(cart2.topology()) is sched
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+def test_cost_latency_point_equals_rounds():
+    for name in schedule_ir.COLLECTIVES:
+        for alg in schedule_ir.ALGORITHMS:
+            sched = build(name, alg, 7)
+            assert sched.cost(1.0, 0.0, 0.0) == pytest.approx(sched.rounds)
+
+
+def test_cost_algorithm_crossover():
+    """doubling wins the latency-bound regime, ring the bandwidth-bound."""
+    ring = build("allreduce", "ring", 8)
+    dbl = build("allreduce", "doubling", 8)
+    small, large = 64, 256 << 20
+    assert dbl.cost(ALPHA, BETA, small) < ring.cost(ALPHA, BETA, small)
+    assert ring.cost(ALPHA, BETA, large) < dbl.cost(ALPHA, BETA, large)
+
+
+def test_cost_monotone_in_size_and_alpha():
+    sched = build("allreduce", "ring", 5)
+    assert sched.cost(ALPHA, BETA, 1 << 20) < sched.cost(ALPHA, BETA,
+                                                         1 << 24)
+    assert sched.cost(ALPHA, BETA, 1 << 20) < sched.cost(10 * ALPHA, BETA,
+                                                         1 << 20)
+
+
+@pytest.mark.parametrize("segments", (2, 4))
+def test_segmented_beats_unsegmented_analytic(segments):
+    """Acceptance: S≥2 strictly beats the unsegmented ring for large
+    payloads once combines cost anything (γ > 0) — the pipelining win."""
+    size = 64 << 20
+    un = build("allreduce", "ring", 8).cost(ALPHA, BETA, size, gamma=GAMMA)
+    seg = build("allreduce", "ring", 8, segments=segments).cost(
+        ALPHA, BETA, size, gamma=GAMMA)
+    assert seg < un
+
+
+@pytest.mark.parametrize("segments", (2, 4))
+def test_segmented_beats_unsegmented_in_simulator(segments):
+    """Same claim under the discrete-event simulator's replay of the
+    schedule DAG (schedule_tasks/schedule_makespan)."""
+    size = 64 << 20
+    kw = dict(size=size, alpha=ALPHA, beta=BETA, gamma=GAMMA)
+    un = simulate.schedule_makespan(build("allreduce", "ring", 8), **kw)
+    seg = simulate.schedule_makespan(
+        build("allreduce", "ring", 8, segments=segments), **kw)
+    assert seg < un
+
+
+def test_simulator_replay_tracks_analytic_cost():
+    """The two consumers of one schedule agree (same DAG, slightly
+    different port models): within 25% on a bandwidth-bound ring."""
+    sched = build("allreduce", "ring", 8)
+    size = 16 << 20
+    analytic = sched.cost(ALPHA, BETA, size, gamma=GAMMA)
+    replay = simulate.schedule_makespan(sched, size=size, alpha=ALPHA,
+                                        beta=BETA, gamma=GAMMA)
+    assert replay == pytest.approx(analytic, rel=0.25)
+
+
+def test_best_schedule_selection():
+    small = best_schedule("allreduce", 8, 64, alpha=ALPHA, beta=BETA,
+                          gamma=GAMMA)
+    assert (small.algorithm, small.segments) == ("doubling", 1)
+    large = best_schedule("allreduce", 8, 64 << 20, alpha=ALPHA,
+                          beta=BETA, gamma=GAMMA)
+    assert large.algorithm == "ring" and large.segments > 1
+
+
+# ---------------------------------------------------------------------------
+# host interpreter over the IR
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", (2, 3, 5, 8))
+@pytest.mark.parametrize("segments", (2, 3))
+def test_segmented_allreduce_host_equals_unsegmented(n, segments):
+    w = tac.CommWorld(n)
+    coll = Collectives(w)
+    vals = [np.arange(17, dtype=np.float64) * (r + 1) for r in range(n)]
+    ref = coll.run_group("allreduce", [{"value": v} for v in vals],
+                         algorithm="ring")
+    seg = coll.run_group("allreduce", [{"value": v} for v in vals],
+                         algorithm="ring", segments=segments)
+    for a, b in zip(ref, seg):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, sum(vals))
+
+
+def test_segmented_allreduce_rejects_doubling():
+    coll = Collectives(tac.CommWorld(4))
+    with pytest.raises(ValueError):
+        coll.allreduce(np.ones(4), rank=0, algorithm="doubling",
+                       segments=2)
+
+
+def test_auto_algorithm_runs_and_matches():
+    w = tac.CommWorld(4)
+    coll = Collectives(w, alpha=ALPHA, beta=BETA, gamma=GAMMA)
+    vals = [np.full(3, float(r)) for r in range(4)]
+    out = coll.run_group("allreduce", [{"value": v} for v in vals],
+                         algorithm="auto")
+    for o in out:
+        np.testing.assert_array_equal(o, sum(vals))
+    # prediction helper exposes the model
+    assert coll.predict("allreduce", 1 << 20) > 0.0
+
+
+def test_auto_is_deterministic_for_ragged_payloads():
+    """Size-based selection only applies to uniform-payload reductions;
+    for ragged ops (alltoall blocks, non-root bcast values) every rank
+    must resolve the SAME schedule or the collective stalls."""
+    w = tac.CommWorld(4)
+    coll = Collectives(w, alpha=ALPHA, beta=BETA, gamma=GAMMA)
+    # rank 0 ships huge blocks, the rest tiny ones — must not stall
+    blocks = [[np.zeros(100_000 if s == 0 else 1) for _ in range(4)]
+              for s in range(4)]
+    out = coll.run_group("alltoall", [{"blocks": b} for b in blocks],
+                         algorithm="auto")
+    assert out[1][0].shape == (100_000,)
+    # bcast: non-root ranks pass None (0 bytes) while root has data
+    got = coll.run_group(
+        "bcast", [{"value": np.zeros(100_000) if r == 0 else None}
+                  for r in range(4)], algorithm="auto")
+    assert all(g.shape == (100_000,) for g in got)
+
+
+def test_predict_auto_respects_nbytes():
+    coll = Collectives(tac.CommWorld(8), alpha=ALPHA, beta=BETA,
+                       gamma=GAMMA)
+    big = coll.predict("allreduce", 64 << 20, algorithm="auto")
+    # auto's choice for the big payload must match explicit best_schedule
+    best = best_schedule("allreduce", 8, 64 << 20, alpha=ALPHA, beta=BETA,
+                         gamma=GAMMA)
+    assert big == pytest.approx(
+        best.cost(ALPHA, BETA, 64 << 20, gamma=GAMMA))
+    # and must beat the latency-optimal schedule it would pick at 0 bytes
+    dbl = coll.predict("allreduce", 64 << 20, algorithm="doubling")
+    assert big < dbl
+
+
+def test_n_rounds_rejects_auto():
+    with pytest.raises(ValueError):
+        n_rounds("allreduce", "auto", 8)
+
+
+# ---------------------------------------------------------------------------
+# persistent collectives (MPI_*_init analogue)
+# ---------------------------------------------------------------------------
+def test_persistent_allreduce_reposts_with_isolated_tags():
+    w = tac.CommWorld(5)
+    coll = Collectives(w)
+    p = coll.persistent("allreduce", algorithm="ring")
+    assert isinstance(p, PersistentCollective)
+    assert p.sched is build("allreduce", "ring", 5)   # pre-built, shared
+    for it in range(4):
+        vals = [np.arange(9, dtype=np.float64) + it * (r + 1)
+                for r in range(5)]
+        out = p.run_group(vals)
+        for o in out:
+            np.testing.assert_array_equal(o, sum(vals))
+
+
+def test_persistent_alltoall_and_bcast():
+    w = tac.CommWorld(4)
+    coll = Collectives(w)
+    pa = coll.persistent("alltoall")
+    blocks = [[f"{s}->{d}" for d in range(4)] for s in range(4)]
+    res = pa.run_group(blocks)
+    for d in range(4):
+        assert res[d] == [f"{s}->{d}" for s in range(4)]
+    pb = coll.persistent("bcast", root=2)
+    out = pb.run_group(["x" if r == 2 else None for r in range(4)])
+    assert out == ["x"] * 4
+
+
+def test_persistent_rejects_auto():
+    coll = Collectives(tac.CommWorld(4))
+    with pytest.raises(ValueError):
+        coll.persistent("allreduce", algorithm="auto")
+
+
+def test_persistent_hierarchical_residual_shape():
+    """The Gauss–Seidel residual pattern: one persistent handle, one
+    posting per iteration, every rank sees the same total."""
+    world = tac.CommWorld(6)
+    hier = HierarchicalCollectives(world, 3)
+    res = hier.persistent(op="sum")
+    for it in range(3):
+        vals = [float(r + it) for r in range(6)]
+        out = res.run_group(vals, key=("res", it))
+        assert all(abs(o - sum(vals)) < 1e-12 for o in out)
+    assert res.cost(ALPHA, BETA, 8) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# one IR, two executors: neighbourhood parity
+# ---------------------------------------------------------------------------
+def test_halo_exchange_runs_the_neighbor_schedule():
+    world = tac.CommWorld(4)
+    cart = world.cart_create((2, 2), periodic=False)
+    hx = HaloExchange(cart)
+    assert hx.sched is build_neighbor(cart.topology())
+    sends = [{d: np.full(2, float(r * 10 + i))
+              for i, (d, _) in enumerate(hx.neighbors(r))}
+             for r in range(4)]
+    got = hx.run_group(sends)
+    for r in range(4):
+        for d, nbr in hx.neighbors(r):
+            opp = (d[0], -d[1])
+            np.testing.assert_array_equal(got[r][d], sends[nbr][opp])
+
+
+def test_hierarchical_cost_latency_point_equals_n_rounds():
+    world = tac.CommWorld(7)
+    hier = HierarchicalCollectives(world, 3)
+    assert hier.cost(1.0, 0.0, 0) == pytest.approx(hier.n_rounds())
+
+
+def test_rank_translation_hooks():
+    """The tac hooks schedule-IR consumers translate through: identity on
+    the world, MPI_Group_translate_ranks on groups — including a
+    CommWorld as translation target (HierarchicalCollectives' leader
+    discovery)."""
+    w = tac.CommWorld(6)
+    assert w.world_rank(3) == 3
+    assert w.group_rank(3) == 3
+    assert w.group_rank(6) is None
+    with pytest.raises(ValueError):
+        w.world_rank(6)
+    g = w.group([4, 1, 5])
+    assert g.translate_many([0, 1, 2], w) == [4, 1, 5]
+    other = w.group([1, 4])
+    assert g.translate_many([0, 1, 2], other) == [1, 0, None]
+
+
+def test_neighbor_schedule_memoised_on_communicator():
+    cart = tac.CommWorld(4).cart_create((2, 2))
+    coll = Collectives(cart)
+    sends = {d: np.zeros(1) for d, _ in
+             [(d, n) for d, n in cart.neighbor_dirs(0)]}
+    # per-rank postings share one schedule object on the communicator
+    from repro.core.collectives import _neighbor_schedule
+    s1 = _neighbor_schedule(cart)
+    s2 = _neighbor_schedule(cart)
+    assert s1 is s2
+    assert HaloExchange(cart).sched is s1

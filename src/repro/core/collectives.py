@@ -388,7 +388,7 @@ def _bind_inputs(sched: Schedule, value, blocks, sends):
     elif kind == "chunks":
         arr = np.asarray(value)
         shape = arr.shape
-        outer = np.array_split(arr.reshape(-1), sched.n)
+        outer = np.array_split(arr.reshape(-1), sched.n_chunks or sched.n)
         if sched.segments == 1:
             for i, c in enumerate(outer):
                 env[("c", i)] = c
@@ -537,12 +537,22 @@ class Collectives:
     """
 
     def __init__(self, comm, *, alpha: float = 1e-6, beta: float = 1e-9,
-                 gamma: float = 0.0) -> None:
+                 gamma: float = 0.0, calibration: Any = None) -> None:
         self.comm = comm
         self.world = comm   # historical alias (pre-sub-communicator name)
         self.alpha = alpha
         self.beta = beta
         self.gamma = gamma
+        if calibration is not None:
+            # a CALIBRATION.json path (tools/calibrate.py output) or a
+            # pre-loaded {"alpha", "beta", "gamma"} mapping: measured
+            # constants replace the nominal ones, so algorithm="auto"
+            # selects under the machine actually running.
+            consts = (dict(calibration) if isinstance(calibration, dict)
+                      else schedule_ir.load_calibration(calibration))
+            self.alpha = float(consts["alpha"])
+            self.beta = float(consts["beta"])
+            self.gamma = float(consts["gamma"])
         self._seq = [itertools.count() for _ in range(comm.size)]
 
     # -- plumbing ----------------------------------------------------------
@@ -564,8 +574,23 @@ class Collectives:
 
     def _resolve(self, name: str, algorithm: Optional[str],
                  segments: int = 1, root: int = 0, value=None,
-                 nbytes: Optional[int] = None) -> Schedule:
+                 nbytes: Optional[int] = None,
+                 hierarchical: Optional[int] = None) -> Schedule:
         """Algorithm/segment resolution -> the (cached) schedule object."""
+        if hierarchical is not None:
+            if name != "allreduce":
+                raise ValueError("hierarchical schedules exist for "
+                                 "allreduce only")
+            if algorithm is not None or segments != 1:
+                raise ValueError("hierarchical= fixes the composed "
+                                 "schedule; drop algorithm/segments")
+            intra = int(hierarchical)
+            if intra < 1 or self.comm.size % intra:
+                raise ValueError(
+                    f"hierarchical intra size {hierarchical} must divide "
+                    f"the communicator size {self.comm.size}")
+            return schedule_ir.build_hierarchical(
+                intra, self.comm.size // intra)
         algorithm = _norm_alg(algorithm or _DEFAULT_ALGORITHM[name])
         if algorithm == "auto":
             if name not in self._UNIFORM_PAYLOAD:
@@ -583,11 +608,12 @@ class Collectives:
 
     def _schedule(self, name: str, algorithm: str, rank: int, key: Any,
                   *, segments: int = 1, root: int = 0, value=None,
-                  op=None, blocks=None):
+                  op=None, blocks=None, hierarchical: Optional[int] = None):
         n = self.comm.size
         if not 0 <= rank < n:
             raise ValueError(f"rank {rank} out of range for size {n}")
-        sched = self._resolve(name, algorithm, segments, root, value)
+        sched = self._resolve(name, algorithm, segments, root, value,
+                              hierarchical=hierarchical)
         return _interpret(sched, self.comm, rank,
                           self._tagger(name, rank, key),
                           value=value, op=op, blocks=blocks)
@@ -634,9 +660,15 @@ class Collectives:
 
     def allreduce(self, value: Any, *, rank: int, op="sum",
                   algorithm: Optional[str] = None, mode: str = "blocking",
-                  key: Any = None, segments: int = 1):
+                  key: Any = None, segments: int = 1,
+                  hierarchical: Optional[int] = None):
         """``segments > 1`` runs the pipelined ring allreduce (combine of
-        segment *k* overlaps transport of segment *k+1*)."""
+        segment *k* overlaps transport of segment *k+1*).
+        ``hierarchical=intra`` runs the composed two-axis schedule
+        (:func:`repro.core.schedule.build_hierarchical` — intra ring
+        reduce-scatter, inter doubling, intra ring allgather) with
+        ``intra`` consecutive ranks per pod; ``intra`` must divide the
+        communicator size."""
         if segments > 1:
             algorithm = algorithm or "ring"
             if _norm_alg(algorithm) != "ring":
@@ -644,7 +676,7 @@ class Collectives:
                                  "algorithm")
         return self._run("allreduce", algorithm, rank, key, mode,
                          value=np.asarray(value), op=_op_fn(op),
-                         segments=segments)
+                         segments=segments, hierarchical=hierarchical)
 
     def allgather(self, value: Any, *, rank: int,
                   algorithm: Optional[str] = None, mode: str = "blocking",
@@ -733,7 +765,8 @@ class Collectives:
         "barrier": (set(), set()),
         "bcast": ({"value", "root"}, set()),
         "reduce": ({"value", "op", "root"}, {"value"}),
-        "allreduce": ({"value", "op", "segments"}, {"value"}),
+        "allreduce": ({"value", "op", "segments", "hierarchical"},
+                      {"value"}),
         "allgather": ({"value"}, {"value"}),
         "reduce_scatter": ({"value", "op"}, {"value"}),
         "alltoall": ({"blocks"}, {"blocks"}),
@@ -770,7 +803,8 @@ class Collectives:
             return self._schedule(name, algorithm, rank, key,
                                   value=np.asarray(kw["value"]),
                                   op=_op_fn(kw.get("op", "sum")),
-                                  segments=kw.get("segments", 1))
+                                  segments=kw.get("segments", 1),
+                                  hierarchical=kw.get("hierarchical"))
         if name == "allgather":
             return self._schedule(name, algorithm, rank, key,
                                   value=kw["value"])
@@ -1019,6 +1053,14 @@ class HierarchicalCollectives:
                                for r in g.translate_many([0], world)})
         self.leaders = world.group(leader_ranks)
         self._seq = [itertools.count() for _ in range(world.size)]
+        # The composed single-schedule form: ONE flat IR object
+        # (reduce-scatter / inter-allreduce / allgather over the
+        # (inter × intra) rank grid) that the Level-B lowering emits over
+        # two mesh axes — available when every intra group is full.
+        self.sched: Optional[Schedule] = (
+            schedule_ir.build_hierarchical(group_size,
+                                           world.size // group_size)
+            if world.size % group_size == 0 else None)
 
     def _schedule(self, rank: int, key: Any, value, op):
         intra = self.intra[rank]
@@ -1051,12 +1093,35 @@ class HierarchicalCollectives:
             return result
         return gen()
 
+    def _composed_gen(self, rank: int, key: Any, value, op):
+        if self.sched is None:
+            raise ValueError(
+                f"composed hierarchical schedule needs equal intra groups "
+                f"(world size {self.world.size} % group_size "
+                f"{self.group_size} != 0)")
+        if key is None:
+            key = next(self._seq[rank])
+
+        def tag(sub):
+            return ("hier-composed", key, sub)
+        return _interpret(self.sched, self.world, rank, tag,
+                          value=np.asarray(value), op=op)
+
     def allreduce(self, value, *, rank: int, op="sum",
-                  mode: str = "blocking", key: Any = None):
+                  mode: str = "blocking", key: Any = None,
+                  composed: bool = False):
+        """``composed=True`` interprets the single flat
+        :func:`repro.core.schedule.build_hierarchical` schedule over the
+        world communicator — the same IR object the Level-B lowering
+        emits over two mesh axes — instead of the three per-group
+        schedules with rank translation.  Results agree; the composed
+        form exists so one schedule instance spans both executors."""
         mode = _norm_mode(mode)
         op = _op_fn(op)
         self.world.world_rank(rank)   # identity hook: validates the rank
-        return _execute_schedule(self._schedule(rank, key, value, op), mode)
+        gen = (self._composed_gen(rank, key, value, op) if composed
+               else self._schedule(rank, key, value, op))
+        return _execute_schedule(gen, mode)
 
     def persistent(self, *, op="sum") -> "PersistentHierarchical":
         """Pre-resolve the three-stage composition for per-iteration
@@ -1064,13 +1129,13 @@ class HierarchicalCollectives:
         return PersistentHierarchical(self, _op_fn(op))
 
     def run_group(self, values: Sequence[Any], *, op="sum",
-                  key: Any = None) -> List[Any]:
+                  key: Any = None, composed: bool = False) -> List[Any]:
         """Sequential driver: all ranks round-robin on this thread."""
         if len(values) != self.world.size:
             raise ValueError(f"need values for all {self.world.size} ranks")
         op = _op_fn(op)
-        machines = [_Machine(self._schedule(r, key, v, op),
-                             CollectiveHandle())
+        make = self._composed_gen if composed else self._schedule
+        machines = [_Machine(make(r, key, v, op), CollectiveHandle())
                     for r, v in enumerate(values)]
         _drive_group(machines)
         return [m.handle.result for m in machines]

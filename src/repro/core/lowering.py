@@ -33,10 +33,21 @@ Three lowering strategies, chosen by the schedule:
   :func:`repro.core.overlap.halo_exchange_rows` gets its zero boundary
   halos without explicit masking.
 
+* **Hierarchical two-axis** — a
+  :func:`repro.core.schedule.build_hierarchical` schedule lowers over TWO
+  mesh axes ``(inter, intra)``: the intra-axis ring reduce-scatter and
+  allgather stages become explicit ``ppermute`` rounds along the intra
+  axis, and the inter stage becomes the recursive-doubling butterfly
+  along the inter axis (power-of-two pod counts) or one fused
+  ``lax.psum`` of the owned chunk (any pod count) — the same three-stage
+  composition the host interpreter runs, reading its structure off the
+  schedule's ``axes`` metadata.
+
 In-graph lowering restrictions (by construction of the substrate): the
 combining operator is addition (the gradient/residual case), payloads are
-dense arrays, and explicit-round lowerings run over ONE mesh axis
-(``native`` takes an axis tuple).
+dense arrays, and flat explicit-round lowerings run over ONE mesh axis —
+``native`` takes an axis tuple, and ``hierarchical`` takes exactly two
+axes in ``(inter, intra)`` order.
 """
 
 from __future__ import annotations
@@ -62,6 +73,15 @@ def _single_axis(axis_name: Axes, what: str) -> str:
         raise ValueError(f"{what} lowers over a single mesh axis, got "
                          f"{axes}; use algorithm='native' for axis tuples")
     return axes[0]
+
+
+def _two_axes(axis_name: Axes) -> Tuple[str, str]:
+    """``(inter, intra)`` mesh axes of a hierarchical lowering."""
+    axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    if len(axes) != 2:
+        raise ValueError(f"hierarchical allreduce lowers over exactly two "
+                         f"mesh axes (inter, intra), got {axes}")
+    return axes[0], axes[1]
 
 
 def _check_world(sched: Schedule, axis_name: str) -> None:
@@ -94,6 +114,15 @@ def allreduce(x: jax.Array, axes: Axes, *,
     if sched is None and algorithm == "native":
         return lax.psum(x, tuple(axes) if not isinstance(axes, str)
                         else (axes,))
+    if sched is None and algorithm == "hierarchical":
+        if segments != 1:
+            # mirror Collectives._resolve: the composed schedule is fixed,
+            # silently dropping segments would fake pipelining.
+            raise ValueError("hierarchical allreduce fixes the composed "
+                             "schedule; drop segments=")
+        inter_axis, intra_axis = _two_axes(axes)
+        sched = schedule_ir.build_hierarchical(axis_size(intra_axis),
+                                               axis_size(inter_axis))
     if sched is None:
         axis = _single_axis(axes, f"allreduce[{algorithm}]")
         sched = schedule_ir.build("allreduce", algorithm, axis_size(axis),
@@ -107,6 +136,8 @@ def lower_allreduce(sched: Schedule, x: jax.Array,
     if sched.name != "allreduce":
         raise ValueError(f"expected an allreduce schedule, got "
                          f"{sched.name!r}")
+    if sched.algorithm == "hierarchical":
+        return _hierarchical_allreduce(sched, x, axes)
     axis = _single_axis(axes, f"allreduce[{sched.algorithm}]")
     _check_world(sched, axis)
     if sched.n == 1:
@@ -158,6 +189,61 @@ def _ring_allreduce(x: jax.Array, axis: str, n: int,
                                axis, fwd)
             tgt = (idx - k - 1) % n
             chunks = chunks.at[tgt, s].set(got)
+    out = chunks.reshape(-1)
+    if pad:
+        out = out[:m]
+    return out.reshape(orig_shape).astype(orig_dtype)
+
+
+def _hierarchical_allreduce(sched: Schedule, x: jax.Array,
+                            axes: Axes) -> jax.Array:
+    """Lower a :func:`repro.core.schedule.build_hierarchical` schedule
+    over two mesh axes.
+
+    Mirrors the schedule stage-for-stage: ``intra-1`` reduce-scatter
+    ppermute rounds along the intra axis (send chunk ``(l-1-k) % n_i``,
+    combine into ``(l-2-k) % n_i`` — identical indexing to the host
+    programs), the inter allreduce of the owned chunk (butterfly rounds
+    along the inter axis for power-of-two pod counts, else one fused
+    ``lax.psum`` — the same trade the flat non-power-of-two doubling
+    makes), and ``intra-1`` allgather rounds back.  Must run inside
+    ``shard_map`` manual over both axes, passed in the schedule's
+    major→minor ``(inter, intra)`` order.
+    """
+    inter_axis, intra_axis = _two_axes(axes)
+    sizes = dict(sched.axes)
+    n_e, n_i = sizes["inter"], sizes["intra"]
+    if axis_size(inter_axis) != n_e or axis_size(intra_axis) != n_i:
+        raise ValueError(
+            f"schedule is for an (inter={n_e}) × (intra={n_i}) grid but "
+            f"axes ({inter_axis!r}, {intra_axis!r}) have sizes "
+            f"({axis_size(inter_axis)}, {axis_size(intra_axis)})")
+    if n_e * n_i == 1:
+        return x
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    m = flat.shape[0]
+    pad = (-m) % n_i
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    chunks = flat.reshape(n_i, -1)
+    li = lax.axis_index(intra_axis)
+    fwd = [(i, (i + 1) % n_i) for i in range(n_i)]
+    for k in range(n_i - 1):            # stage 1: intra reduce-scatter
+        got = lax.ppermute(jnp.take(chunks, (li - 1 - k) % n_i, axis=0),
+                           intra_axis, fwd)
+        chunks = chunks.at[(li - 2 - k) % n_i].add(got)
+    own = jnp.take(chunks, li % n_i, axis=0)
+    if n_e > 1:                         # stage 2: inter allreduce
+        if n_e & (n_e - 1):
+            own = lax.psum(own, (inter_axis,))
+        else:
+            own = _butterfly_allreduce(own, inter_axis, n_e)
+    chunks = chunks.at[li % n_i].set(own)
+    for k in range(n_i - 1):            # stage 3: intra allgather
+        got = lax.ppermute(jnp.take(chunks, (li - k) % n_i, axis=0),
+                           intra_axis, fwd)
+        chunks = chunks.at[(li - k - 1) % n_i].set(got)
     out = chunks.reshape(-1)
     if pad:
         out = out[:m]

@@ -105,7 +105,7 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
                bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                compress: Optional[str] = None, mean: bool = True,
                algorithm: str = "native", segments: int = 1,
-               wire: str = "fp32"):
+               wire: str = "fp32", hierarchical: bool = False):
     """Reduce gradients over the (manual) DP axes with a chosen schedule.
 
     Must be called inside ``shard_map`` manual over ``axes``.  ``mode``
@@ -114,7 +114,12 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
     fused all-reduce node, the default and the production path),
     ``"ring"``/``"doubling"`` (explicit in-graph rounds lowered from the
     schedule IR; single DP axis only), with ``segments > 1`` pipelining
-    the ring.
+    the ring.  ``hierarchical=True`` requires exactly two DP axes in
+    ``(inter, intra)`` order — e.g. ``("pod", "data")`` on the multi-pod
+    production mesh — and reduces each bucket with the composed
+    :func:`repro.core.schedule.build_hierarchical` schedule (intra-axis
+    ring rounds, inter-axis butterfly or fused psum), the Level-B form of
+    :class:`repro.core.collectives.HierarchicalCollectives`.
 
     Wire dtype: by default every leaf travels and accumulates in fp32
     (identical numerics to the pre-IR code in every mode); ``wire="leaf"``
@@ -127,6 +132,14 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
     """
     if isinstance(axes, str):
         axes = (axes,)
+    if hierarchical:
+        if len(tuple(axes)) != 2:
+            raise ValueError(f"hierarchical grad sync needs exactly two "
+                             f"DP axes (inter, intra), got {tuple(axes)}")
+        if algorithm != "native" or segments != 1:
+            raise ValueError("hierarchical=True picks the schedule; drop "
+                             "algorithm=/segments=")
+        algorithm = "hierarchical"
     leaves, treedef, shapes, sizes = _flatten_with_sizes(grads)
     # psum over multiple axes: pass the tuple directly.
     axis_arg = tuple(axes)

@@ -60,7 +60,8 @@ from typing import Any, Dict, List, Sequence, Tuple
 __all__ = [
     "Op", "Send", "Recv", "Combine", "Copy", "Pack", "Unpack", "Slice",
     "Const", "Schedule", "Transfer", "build", "build_neighbor",
-    "best_schedule", "COLLECTIVES", "ALGORITHMS",
+    "build_hierarchical", "best_schedule", "load_calibration",
+    "COLLECTIVES", "ALGORITHMS",
 ]
 
 COLLECTIVES = ("barrier", "bcast", "reduce", "allreduce", "allgather",
@@ -259,6 +260,14 @@ class Schedule:
     out_bufs: Tuple[Any, ...] = ()
     out_dirs: Tuple[Tuple[Any, ...], ...] = ()
     chunk_bufs: Tuple[Any, ...] = ()
+    # ``chunks`` inputs split into this many outer chunks (0 -> ``n``, the
+    # flat-ring convention).  Hierarchical schedules split into the INTRA
+    # group size instead: every rank of one pod owns one chunk.
+    n_chunks: int = 0
+    # Mesh factorisation metadata for multi-axis schedules, major -> minor:
+    # ``(("inter", n_e), ("intra", n_i))`` with global rank
+    # ``r = pod * n_i + local``.  Empty for flat single-axis schedules.
+    axes: Tuple[Tuple[str, int], ...] = ()
 
     # -- structure ----------------------------------------------------------
     def transfers(self) -> List[Transfer]:
@@ -981,6 +990,168 @@ def build_neighbor(topology: Tuple[Tuple[Tuple[Any, int], ...], ...]
                      input_kind="dirs", output_kind="dirs",
                      out_dirs=out_dirs)
     return _fix_recv_order(sched).validate()
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical composition: one flat schedule spanning two mesh axes
+# ---------------------------------------------------------------------------
+def _embed(b: _B, sub: Schedule, ranks: Sequence[int], ns: Any, *,
+           inputs: Dict[int, Any], frac_scale: float = 1.0) -> List[Any]:
+    """Splice ``sub``'s per-rank programs into builder ``b``.
+
+    ``ranks[sr]`` maps sub-rank ``sr`` to its global rank; ``inputs[sr]``
+    binds the sub-schedule's ``"in"`` buffer to an existing global buffer;
+    internal buffers and tags are namespaced under ``ns`` (which must be
+    unique per embedding) so sibling embeddings can never collide;
+    ``frac_scale`` rescales per-op payload fractions to the enclosing
+    schedule's nominal size.  Supports ``array``/``value`` input and
+    ``buf`` output sub-schedules (the reductions); returns the renamed
+    per-sub-rank output buffers.
+    """
+    if sub.input_kind not in ("array", "value") or sub.output_kind != "buf":
+        raise ValueError(f"cannot embed a {sub.input_kind!r}->"
+                         f"{sub.output_kind!r} schedule")
+
+    def rename(sr: int, buf: Any) -> Any:
+        return inputs[sr] if buf == "in" else (ns, buf)
+
+    for sr, prog in enumerate(sub.programs):
+        gr = ranks[sr]
+        for op in prog:
+            if isinstance(op, Send):
+                b.programs[gr].append(Send(
+                    ranks[op.peer], rename(sr, op.buf), (ns, op.tag),
+                    op.frac * frac_scale))
+            elif isinstance(op, Recv):
+                b.programs[gr].append(Recv(
+                    ranks[op.peer], rename(sr, op.buf), (ns, op.tag),
+                    op.frac * frac_scale))
+            elif isinstance(op, Combine):
+                b.programs[gr].append(Combine(
+                    rename(sr, op.out), rename(sr, op.a), rename(sr, op.b),
+                    op.frac * frac_scale))
+            elif isinstance(op, Copy):
+                b.programs[gr].append(Copy(rename(sr, op.out),
+                                           rename(sr, op.src)))
+            elif isinstance(op, Const):
+                b.programs[gr].append(Const(rename(sr, op.out), op.value))
+            else:
+                raise ValueError(f"cannot embed op {op!r}")
+    return [rename(sr, sub.out_bufs[sr]) for sr in range(sub.n)]
+
+
+def build_hierarchical(intra: int, inter: int, *,
+                       inter_algorithm: str = "doubling") -> Schedule:
+    """Hierarchical allreduce over a 2-D (inter × intra) rank grid.
+
+    One FLAT schedule over ``n = intra·inter`` ranks (global rank
+    ``r = pod·intra + local``) composing three stages:
+
+    1. ring **reduce-scatter** inside each pod (``intra-1`` rounds of
+       ``m/intra`` bytes — after it, local rank ``l`` owns the pod-sum of
+       chunk ``l``);
+    2. recursive-doubling **allreduce** of each owned chunk across pods
+       (every pod's rank ``l`` butterflies chunk ``l`` with its peers —
+       the :func:`_allreduce_doubling` sub-schedule embedded per chunk via
+       :func:`_embed`, fold/unfold handling any pod count);
+    3. ring **allgather** inside each pod (shard-wise broadcast back —
+       ``intra-1`` more rounds), so every rank finishes with the global
+       sum.
+
+    Because the result is an ordinary validated :class:`Schedule`, all
+    four consumers run it unchanged: the Level-A interpreter
+    (:func:`repro.core.collectives._interpret`), the Level-B two-axis
+    lowering (:func:`repro.core.lowering.lower_allreduce` — intra-axis
+    ppermute rounds, inter-axis butterfly or fused psum), the α-β
+    :meth:`Schedule.cost`, and the discrete-event replay
+    (:func:`repro.core.simulate.schedule_tasks`).  ``Schedule.axes``
+    records the ``(("inter", n_e), ("intra", n_i))`` factorisation the
+    lowering and the two-tier link model key off.
+    """
+    return _hier_cached(int(intra), int(inter), inter_algorithm)
+
+
+@functools.lru_cache(maxsize=128)
+def _hier_cached(intra: int, inter: int, inter_algorithm: str) -> Schedule:
+    if intra < 1 or inter < 1:
+        raise ValueError(f"need positive axis sizes, got intra={intra}, "
+                         f"inter={inter}")
+    if inter_algorithm != "doubling":
+        raise ValueError(f"inter stage supports 'doubling' (butterfly / "
+                         f"fused psum at Level B), got {inter_algorithm!r}")
+    n = intra * inter
+    b = _B(n)
+    frac = 1.0 / intra
+    cur: Dict[Tuple[int, int], Any] = {(r, i): ("c", i)
+                                       for r in range(n)
+                                       for i in range(intra)}
+    # stage 1 — intra ring reduce-scatter within each pod
+    for k in range(intra - 1):
+        for r in range(n):
+            pod, loc = divmod(r, intra)
+            dst = pod * intra + (loc + 1) % intra
+            b.xfer(r, dst, cur[(r, (loc - 1 - k) % intra)],
+                   ("m", "rs", k, dst), frac)
+        for r in range(n):
+            _, loc = divmod(r, intra)
+            i = (loc - 2 - k) % intra
+            nxt = ("a", "rs", k, i)
+            b.programs[r].append(
+                Combine(nxt, cur[(r, i)], ("m", "rs", k, r), frac))
+            cur[(r, i)] = nxt
+    # stage 2 — inter allreduce of each rank's owned chunk across pods
+    if inter > 1:
+        sub = build("allreduce", inter_algorithm, inter)
+        for loc in range(intra):
+            ranks = tuple(pod * intra + loc for pod in range(inter))
+            outs = _embed(b, sub, ranks, ("x", loc),
+                          inputs={sr: cur[(gr, loc)]
+                                  for sr, gr in enumerate(ranks)},
+                          frac_scale=frac)
+            for sr, gr in enumerate(ranks):
+                cur[(gr, loc)] = outs[sr]
+    # stage 3 — intra ring allgather (shard-wise broadcast back down)
+    for k in range(intra - 1):
+        for r in range(n):
+            pod, loc = divmod(r, intra)
+            dst = pod * intra + (loc + 1) % intra
+            b.xfer(r, dst, cur[(r, (loc - k) % intra)],
+                   ("m", "ag", k, dst), frac)
+        for r in range(n):
+            _, loc = divmod(r, intra)
+            cur[(r, (loc - k - 1) % intra)] = ("m", "ag", k, r)
+    # canonicalise chunk buffers for the concat output
+    for r in range(n):
+        for i in range(intra):
+            if cur[(r, i)] != ("c", i):
+                b.programs[r].append(Copy(("c", i), cur[(r, i)]))
+    sched = Schedule(name="allreduce", algorithm="hierarchical", n=n,
+                     programs=tuple(tuple(p) for p in b.programs),
+                     input_kind="chunks", output_kind="concat",
+                     chunk_bufs=tuple(("c", i) for i in range(intra)),
+                     n_chunks=intra,
+                     axes=(("inter", inter), ("intra", intra)))
+    return _fix_recv_order(sched).validate()
+
+
+# ---------------------------------------------------------------------------
+# Calibrated constants (tools/calibrate.py output)
+# ---------------------------------------------------------------------------
+def load_calibration(path: Any = "CALIBRATION.json") -> Dict[str, float]:
+    """Read α/β/γ least-squares fitted by ``tools/calibrate.py``.
+
+    Returns exactly ``{"alpha", "beta", "gamma"}`` — ready to splat into
+    :func:`best_schedule`/:meth:`Schedule.cost` keyword arguments, and
+    what ``Collectives(comm, calibration=path)`` consumes so
+    ``algorithm="auto"`` selects under measured rather than nominal
+    constants.  (The calibration file also carries a per-call
+    ``overhead`` term the fit absorbs; schedule costs deliberately
+    exclude it.)
+    """
+    import json
+    import pathlib
+    data = json.loads(pathlib.Path(path).read_text())
+    return {k: float(data[k]) for k in ("alpha", "beta", "gamma")}
 
 
 # ---------------------------------------------------------------------------

@@ -304,9 +304,29 @@ class Simulator:
 # ---------------------------------------------------------------------------
 # Schedule-IR replay: one Schedule -> a SimTask graph
 # ---------------------------------------------------------------------------
+def two_tier_link(intra: int, *, alpha: float, beta: float,
+                  inter_alpha: float, inter_beta: float):
+    """Per-transfer (α, β) for a two-tier (pod) machine.
+
+    Ranks are numbered ``r = pod·intra + local`` (the
+    :func:`repro.core.schedule.build_hierarchical` layout); transfers
+    between ranks of different pods pay the inter-pod constants.  Pass
+    the result as ``link=`` to :func:`schedule_tasks` /
+    :func:`schedule_makespan` — it applies to ANY schedule over that rank
+    layout, which is what makes the hierarchical-vs-flat-ring replay an
+    apples-to-apples comparison on the same machine model.
+    """
+    def link(src: int, dst: int):
+        if src // intra != dst // intra:
+            return inter_alpha, inter_beta
+        return alpha, beta
+    return link
+
+
 def schedule_tasks(sched, *, size: float, alpha: float, beta: float,
                    gamma: float = 0.0, kind: str = COMM_EVENTS,
-                   base_id: int = 0, name_prefix: str = "") -> List[SimTask]:
+                   base_id: int = 0, name_prefix: str = "",
+                   link=None) -> List[SimTask]:
     """Expand a :class:`repro.core.schedule.Schedule` into a SimTask graph.
 
     The discrete-event counterpart of :meth:`Schedule.cost`: each matched
@@ -322,9 +342,12 @@ def schedule_tasks(sched, *, size: float, alpha: float, beta: float,
     ``kind`` picks the transfer tasks' waiting discipline (``comm-events``
     by default — the event-bound collective; ``comm-paused`` /
     ``comm-held`` model the blocking and sentinel-serialised runs).
-    Returns tasks with ids starting at ``base_id``; feed them to
-    :class:`Simulator` (``n_ranks=sched.n``), possibly merged with other
-    graphs.
+    ``link`` optionally maps ``(src rank, dst rank)`` to that transfer's
+    ``(α, β)`` — a heterogeneous machine model; :func:`two_tier_link`
+    builds the pod-aware one that makes hierarchical schedules pay cheap
+    intra-pod and expensive inter-pod constants.  Returns tasks with ids
+    starting at ``base_id``; feed them to :class:`Simulator`
+    (``n_ranks=sched.n``), possibly merged with other graphs.
     """
     from .schedule import Combine, Const, Copy, Pack, Recv, Send, Slice, \
         Unpack
@@ -361,7 +384,9 @@ def schedule_tasks(sched, *, size: float, alpha: float, beta: float,
                 if isinstance(op, Recv):
                     if op.tag not in arrivals:
                         break
-                    lat = alpha + beta * op.frac * size
+                    a, bt = (alpha, beta) if link is None \
+                        else link(op.peer, r)
+                    lat = a + bt * op.frac * size
                     cid = new_task(
                         r, 0.0, kind, f"xfer:{op.tag}",
                         events=[(d, lat) for d in arrivals[op.tag]])
@@ -409,12 +434,14 @@ def schedule_makespan(sched, *, size: float, alpha: float, beta: float,
                       gamma: float = 0.0, kind: str = COMM_EVENTS,
                       workers_per_rank: int = 1,
                       task_overhead: float = 0.0,
-                      resume_overhead: float = 0.0) -> float:
+                      resume_overhead: float = 0.0,
+                      link=None) -> float:
     """Discrete-event makespan of one schedule under the α-β(-γ) model —
     the simulator-side twin of :meth:`Schedule.cost` (which is analytic
-    and additionally serialises send ports)."""
+    and additionally serialises send ports).  ``link`` (see
+    :func:`two_tier_link`) replays the DAG on a heterogeneous machine."""
     tasks = schedule_tasks(sched, size=size, alpha=alpha, beta=beta,
-                           gamma=gamma, kind=kind)
+                           gamma=gamma, kind=kind, link=link)
     sim = Simulator(sched.n, workers_per_rank, task_overhead=task_overhead,
                     resume_overhead=resume_overhead)
     return sim.run(tasks).makespan

@@ -75,3 +75,35 @@ def test_dot_contracting_dims():
     c = module_cost(jax.jit(f).lower(a, b).compile().as_text())
     expected = 2 * 4 * 32 * 16 * 64
     assert expected <= c.flops <= 1.05 * expected + 1e4
+
+
+def test_collective_counts_and_wire_bytes():
+    """The analyzer's collective accounting on a hand-written module —
+    the counts the hierarchical-lowering tests assert on compiled
+    programs, pinned here against known shapes: per-kind counts, operand
+    bytes, and ring-model wire bytes (all-reduce 2(g-1)/g, permute 1x)."""
+    txt = """
+HloModule synthetic
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  %cp1 = f32[1024]{0} collective-permute(%p0), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %cp2 = f32[1024]{0} collective-permute(%cp1), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %ar = f32[1024]{0} all-reduce(%cp2), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %out = f32[1024]{0} add(%ar, %cp1)
+}
+"""
+    c = module_cost(txt, n_devices=4)
+    assert c.coll_counts["collective-permute"] == 2
+    assert c.coll_counts["all-reduce"] == 1
+    assert c.coll_bytes["collective-permute"] == 2 * 4096
+    assert c.coll_wire_bytes["collective-permute"] == 2 * 4096  # 1x factor
+    # all-reduce over a 4-rank group: 2(g-1)/g of the operand bytes
+    assert c.coll_wire_bytes["all-reduce"] == pytest.approx(
+        4096 * 2 * 3 / 4)

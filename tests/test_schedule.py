@@ -342,3 +342,220 @@ def test_neighbor_schedule_memoised_on_communicator():
     s2 = _neighbor_schedule(cart)
     assert s1 is s2
     assert HaloExchange(cart).sched is s1
+
+
+# ---------------------------------------------------------------------------
+# hierarchical composition: one flat schedule spanning two mesh axes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("intra,inter",
+                         [(4, 2), (2, 4), (3, 2), (2, 3), (4, 1), (1, 4),
+                          (2, 2), (1, 1)])
+def test_hierarchical_structure_and_rounds(intra, inter):
+    """build_hierarchical validates and its critical path is the
+    composed closed form: 2(intra-1) intra ring rounds + the inter
+    doubling rounds (fold/unfold included for non-power-of-two pods)."""
+    sched = schedule_ir.build_hierarchical(intra, inter)
+    sched.validate()
+    assert sched.n == intra * inter
+    assert sched.algorithm == "hierarchical"
+    assert dict(sched.axes) == {"inter": inter, "intra": intra}
+    assert sched.n_chunks == intra
+    expect = 2 * (intra - 1)
+    if inter > 1:
+        expect += n_rounds("allreduce", "doubling", inter)
+    assert sched.rounds == expect
+
+
+def test_hierarchical_is_cached_data():
+    a = schedule_ir.build_hierarchical(4, 2)
+    assert schedule_ir.build_hierarchical(4, 2) is a
+    assert schedule_ir.build_hierarchical(2, 4) is not a
+
+
+def test_hierarchical_rejects_bad_arguments():
+    with pytest.raises(ValueError):
+        schedule_ir.build_hierarchical(0, 2)
+    with pytest.raises(ValueError):
+        schedule_ir.build_hierarchical(2, 2, inter_algorithm="ring")
+
+
+@pytest.mark.parametrize("intra,inter", [(4, 2), (2, 4), (3, 2), (2, 3)])
+def test_hierarchical_host_matches_flat(intra, inter):
+    """Level A interprets the composed schedule to the same result as the
+    flat ring allreduce and the numpy reduction — including payloads not
+    divisible by the chunk count."""
+    n = intra * inter
+    world = tac.CommWorld(n)
+    coll = Collectives(world)
+    vals = [np.arange(11, dtype=np.float64) * (r + 1) + 0.25
+            for r in range(n)]
+    want = np.sum(vals, axis=0)
+    got = coll.run_group("allreduce", [{"value": v} for v in vals],
+                         hierarchical=intra)
+    flat = coll.run_group("allreduce", [{"value": v} for v in vals])
+    for g, f in zip(got, flat):
+        np.testing.assert_allclose(g, want)
+        np.testing.assert_allclose(f, want)
+
+
+def test_hierarchical_kwarg_validation():
+    coll = Collectives(tac.CommWorld(6))
+    with pytest.raises(ValueError):        # intra must divide the size
+        coll.run_group("allreduce", [{"value": np.ones(2)}] * 6,
+                       hierarchical=4)
+    with pytest.raises(ValueError):        # composed schedule is fixed
+        coll.run_group("allreduce", [{"value": np.ones(2)}] * 6,
+                       hierarchical=2, algorithm="ring")
+
+
+def test_hierarchical_composed_equals_grouped():
+    """HierarchicalCollectives: the composed single-schedule form agrees
+    with the three-stage sub-group form, and exposes the IR object the
+    Level-B lowering consumes."""
+    world = tac.CommWorld(8)
+    hier = HierarchicalCollectives(world, 4)
+    assert hier.sched is schedule_ir.build_hierarchical(4, 2)
+    vals = [np.full(7, float(r + 1)) for r in range(8)]
+    grouped = hier.run_group(vals)
+    composed = hier.run_group(vals, composed=True)
+    for g, c in zip(grouped, composed):
+        np.testing.assert_allclose(g, np.full(7, 36.0))
+        np.testing.assert_allclose(c, np.full(7, 36.0))
+    # unequal intra groups: no flat factorisation exists
+    ragged = HierarchicalCollectives(tac.CommWorld(6), 4)
+    assert ragged.sched is None
+    with pytest.raises(ValueError):
+        ragged.run_group([np.ones(2)] * 6, composed=True)
+
+
+def test_hierarchical_cost_beats_flat_ring_on_latency():
+    """Uniform constants: (4, 2) moves the same bytes as the flat 8-rank
+    ring in half the rounds, so it wins for latency-bound payloads and
+    never costs more wire time."""
+    hier = schedule_ir.build_hierarchical(4, 2)
+    flat = build("allreduce", "ring", 8)
+    assert hier.rounds < flat.rounds
+    assert hier.cost(ALPHA, BETA, 1024) < flat.cost(ALPHA, BETA, 1024)
+
+
+def test_hierarchical_simulator_replay_and_two_tier_link():
+    """The discrete-event replay of the composed DAG: the latency point
+    recovers the closed-form rounds, and under a two-tier machine
+    (expensive inter-pod links) the hierarchical composition beats the
+    flat ring replayed on the SAME link model — the paper's motivation
+    for hierarchy on a production mesh."""
+    hier = schedule_ir.build_hierarchical(4, 2)
+    flat = build("allreduce", "ring", 8)
+    assert simulate.schedule_makespan(
+        hier, size=0.0, alpha=1.0, beta=0.0) == pytest.approx(hier.rounds)
+    link = simulate.two_tier_link(4, alpha=1e-6, beta=1e-10,
+                                  inter_alpha=2e-5, inter_beta=2e-9)
+    mh = simulate.schedule_makespan(hier, size=1e6, alpha=1e-6,
+                                    beta=1e-10, link=link)
+    mf = simulate.schedule_makespan(flat, size=1e6, alpha=1e-6,
+                                    beta=1e-10, link=link)
+    assert mh < mf
+
+
+# ---------------------------------------------------------------------------
+# calibrated constants (tools/calibrate.py round trip)
+# ---------------------------------------------------------------------------
+def test_load_calibration_feeds_auto_selection(tmp_path):
+    import json
+    path = tmp_path / "CALIBRATION.json"
+    path.write_text(json.dumps({"alpha": 2e-5, "beta": 3e-9,
+                                "gamma": 1e-10, "overhead": 0.5}))
+    consts = schedule_ir.load_calibration(path)
+    assert consts == {"alpha": 2e-5, "beta": 3e-9, "gamma": 1e-10}
+    coll = Collectives(tac.CommWorld(4), calibration=path)
+    assert (coll.alpha, coll.beta, coll.gamma) == (2e-5, 3e-9, 1e-10)
+    # the calibrated constants drive algorithm="auto" via best_schedule
+    sched = best_schedule("allreduce", 4, 8, **consts)
+    assert sched.algorithm == "doubling"   # tiny payload: latency-bound
+    big = best_schedule("allreduce", 4, 1 << 24, **consts)
+    assert big.algorithm == "ring"         # huge payload: bandwidth-bound
+    # dicts work too (pre-loaded calibration shared across communicators)
+    coll2 = Collectives(tac.CommWorld(4), calibration=consts)
+    assert coll2.beta == 3e-9
+
+
+def test_calibrate_fit_recovers_constants(tmp_path):
+    """tools/calibrate.py round trip: synthesise measurements from known
+    constants, fit, and gate against a self-written baseline."""
+    import json
+    import pathlib
+    import subprocess
+    import sys
+    true = {"alpha": 2e-6, "beta": 4e-9, "gamma": 1e-10, "overhead": 3e-3}
+    report = {"modes": {}}
+    for i, (name, n, size) in enumerate(
+            [("fused", 8, 1 << 20), ("bucketed", 8, 1 << 16),
+             ("sentinel", 8, 1 << 18), ("tiny", 8, 1 << 8)]):
+        sched = build("allreduce", "ring" if i % 2 else "doubling", n)
+        feats = {"rounds": sched.cost(1.0, 0.0, 0.0),
+                 "wire_bytes": sched.cost(0.0, 1.0, size),
+                 "combine_bytes": sched.cost(0.0, 0.0, size, gamma=1.0)}
+        measured = (true["alpha"] * feats["rounds"]
+                    + true["beta"] * feats["wire_bytes"]
+                    + true["gamma"] * feats["combine_bytes"]
+                    + true["overhead"])
+        report["modes"][name] = {"features": feats, "measured_s": measured}
+    bench = tmp_path / "BENCH_overlap.json"
+    bench.write_text(json.dumps(report))
+    tool = pathlib.Path(__file__).resolve().parents[1] / "tools" / \
+        "calibrate.py"
+    base = tmp_path / "BENCH_baseline.json"
+    out = tmp_path / "CALIBRATION.json"
+    run = subprocess.run(
+        [sys.executable, str(tool), "--bench", str(bench), "--out",
+         str(out), "--apply", "--write-baseline", str(base)],
+        capture_output=True, text=True)
+    assert run.returncode == 0, run.stderr
+    consts = json.loads(out.read_text())
+    # exact data, 4 unknowns, 4 independent rows: the fit recovers them
+    assert consts["alpha"] == pytest.approx(true["alpha"], rel=1e-3)
+    assert consts["beta"] == pytest.approx(true["beta"], rel=1e-3)
+    assert consts["overhead"] == pytest.approx(true["overhead"], rel=1e-3)
+    # calibrated predictions land next to the nominal ones
+    applied = json.loads(bench.read_text())
+    row = applied["modes"]["fused"]
+    assert row["predicted_calibrated_s"] == pytest.approx(
+        row["measured_s"], rel=1e-6)
+    # and the gate passes against the freshly written baseline...
+    run = subprocess.run(
+        [sys.executable, str(tool), "--bench", str(bench), "--gate",
+         "--baseline", str(base), "--out", str(out)],
+        capture_output=True, text=True)
+    assert run.returncode == 0, run.stdout + run.stderr
+    # ...but fails once a measurement drifts structurally
+    report["modes"]["fused"]["measured_s"] *= 50.0
+    bench.write_text(json.dumps(report))
+    run = subprocess.run(
+        [sys.executable, str(tool), "--bench", str(bench), "--gate",
+         "--baseline", str(base), "--out", str(out)],
+        capture_output=True, text=True)
+    assert run.returncode == 1
+    assert "DRIFT" in run.stdout
+    # ...and when a baseline row vanishes from the report entirely
+    del report["modes"]["sentinel"]
+    bench.write_text(json.dumps(report))
+    run = subprocess.run(
+        [sys.executable, str(tool), "--bench", str(bench), "--gate",
+         "--baseline", str(base), "--out", str(out)],
+        capture_output=True, text=True)
+    assert run.returncode == 1
+    assert "MISSING" in run.stdout
+
+
+def test_hierarchical_rejects_segments_at_both_levels():
+    """Both executors refuse segments on the fixed composed schedule —
+    silently dropping it would fake pipelining (Level B mirrors
+    Collectives._resolve)."""
+    from repro.core import lowering
+    from repro.core import overlap
+    with pytest.raises(ValueError, match="segments"):
+        lowering.allreduce(None, ("pod", "data"),
+                           algorithm="hierarchical", segments=4)
+    with pytest.raises(ValueError, match="segments"):
+        overlap.sync_grads({"w": np.zeros(4)}, axes=("pod", "data"),
+                           hierarchical=True, segments=4)

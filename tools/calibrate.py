@@ -1,0 +1,209 @@
+#!/usr/bin/env python
+"""Fit α/β/γ from measured bench runs and gate CI on prediction drift.
+
+``benchmarks/overlap_bench.py`` writes, next to every measured wall time,
+the schedule IR's linear cost features — critical-path rounds ``R``,
+one-port wire bytes ``W``, one-port combine bytes ``V``.  This tool
+least-squares fits the machine model
+
+    measured ≈ α·R + β·W + γ·V + overhead
+
+over every row of the bench report (plus ``--history`` files when
+present), with all four constants constrained non-negative (active-set
+NNLS over ``numpy.linalg.lstsq``).  The fitted constants are the
+CALIBRATED α-β(-γ) model: ``repro.core.schedule.load_calibration`` feeds
+them to ``best_schedule`` / ``Collectives(comm, calibration=...)`` so
+``algorithm="auto"`` selects under measured rather than nominal
+constants, and ``--apply`` writes ``predicted_calibrated_s`` back into
+the bench report next to the nominal ``predicted_s`` so the two
+predictions can be compared like with like.
+
+**Gating** (the bench-smoke CI job): per-row ratios
+``measured / predicted_calibrated`` are compared against the committed
+``BENCH_baseline.json``.  Because the fit is re-run on the current
+machine, uniform speed differences cancel — a ratio drifting beyond
+``--tolerance`` (×) of its baseline value means a *structural* change:
+a schedule serialising that used to overlap, a collective count
+regression, a cost-model break.
+
+Usage:
+  python tools/calibrate.py [--bench BENCH_overlap.json]
+      [--history FILE ...] [--out CALIBRATION.json] [--apply]
+      [--write-baseline BENCH_baseline.json]
+      [--gate --baseline BENCH_baseline.json --tolerance 3.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+FEATURE_KEYS = ("rounds", "wire_bytes", "combine_bytes")
+CONSTANT_KEYS = ("alpha", "beta", "gamma", "overhead")
+_EPS = 1e-12
+
+
+def collect_rows(report: dict, prefix: str = "") -> List[Tuple[str, dict]]:
+    """Every nested dict carrying both ``features`` and ``measured_s``
+    is one calibration/gate row, named by its JSON path."""
+    rows = []
+    for key, val in report.items():
+        if not isinstance(val, dict):
+            continue
+        path = f"{prefix}{key}"
+        if "features" in val and "measured_s" in val:
+            rows.append((path, val))
+        rows.extend(collect_rows(val, prefix=f"{path}."))
+    return rows
+
+
+def nnls(A: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Non-negative least squares via active-set elimination: drop any
+    column fitted negative and refit (few columns, few rows — exactness
+    is not worth a scipy dependency)."""
+    active = list(range(A.shape[1]))
+    while True:
+        x = np.zeros(A.shape[1])
+        if active:
+            sol, *_ = np.linalg.lstsq(A[:, active], b, rcond=None)
+            x[np.array(active)] = sol
+        neg = [c for c in active if x[c] < 0]
+        if not neg:
+            return x
+        active = [c for c in active if c not in neg]
+
+
+def fit(rows: List[Tuple[str, dict]]) -> Dict[str, float]:
+    A = np.array([[r["features"][k] for k in FEATURE_KEYS] + [1.0]
+                  for _, r in rows], dtype=float)
+    b = np.array([r["measured_s"] for _, r in rows], dtype=float)
+    x = nnls(A, b)
+    return dict(zip(CONSTANT_KEYS, (float(v) for v in x)))
+
+
+def predict_calibrated(row: dict, consts: Dict[str, float]) -> float:
+    f = row["features"]
+    return (consts["alpha"] * f["rounds"]
+            + consts["beta"] * f["wire_bytes"]
+            + consts["gamma"] * f["combine_bytes"]
+            + consts["overhead"])
+
+
+def ratios(rows: List[Tuple[str, dict]],
+           consts: Dict[str, float]) -> Dict[str, float]:
+    return {name: row["measured_s"] / max(predict_calibrated(row, consts),
+                                          _EPS)
+            for name, row in rows}
+
+
+def gate(cur: Dict[str, float], base: Dict[str, float],
+         tolerance: float) -> List[str]:
+    """Drift report; non-empty means fail.  NEW rows (in the current run
+    but not the baseline) are reported without failing — adding a bench
+    leg must not insta-break CI; the baseline refresh picks it up.  A
+    baseline row MISSING from the current run fails: a leg (or its
+    ``features`` key) silently dropping out is exactly the unmeasured
+    regression the gate exists to catch."""
+    failures = []
+    for name in sorted(cur):
+        if name not in base:
+            print(f"  new row (not gated): {name}")
+            continue
+        drift = cur[name] / max(base[name], _EPS)
+        ok = 1.0 / tolerance <= drift <= tolerance
+        print(f"  {name}: ratio {cur[name]:.3g} vs baseline "
+              f"{base[name]:.3g} (drift ×{drift:.2f}) "
+              f"{'ok' if ok else 'DRIFT'}")
+        if not ok:
+            failures.append(
+                f"{name}: measured/predicted ratio drifted ×{drift:.2f} "
+                f"from baseline (tolerance ×{tolerance})")
+    for name in sorted(set(base) - set(cur)):
+        print(f"  {name}: MISSING from current run")
+        failures.append(
+            f"{name}: baseline row missing from the bench report — a leg "
+            f"stopped emitting measured_s/features; refresh the baseline "
+            f"deliberately if it was removed on purpose")
+    return failures
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--bench", default="BENCH_overlap.json")
+    p.add_argument("--history", nargs="*", default=[],
+                   help="extra bench reports to include in the fit")
+    p.add_argument("--out", default="CALIBRATION.json")
+    p.add_argument("--apply", action="store_true",
+                   help="write predicted_calibrated_s into the bench json")
+    p.add_argument("--write-baseline", metavar="PATH",
+                   help="write the per-row ratios as the new baseline")
+    p.add_argument("--gate", action="store_true")
+    p.add_argument("--baseline", default="BENCH_baseline.json")
+    p.add_argument("--tolerance", type=float, default=None,
+                   help="max allowed × drift of a row's measured/predicted"
+                        " ratio vs the baseline; when gating, defaults to"
+                        " the tolerance recorded IN the baseline file"
+                        " (single source of truth), else 3.0")
+    args = p.parse_args(argv)
+
+    bench_path = pathlib.Path(args.bench)
+    report = json.loads(bench_path.read_text())
+    rows = collect_rows(report)
+    if not rows:
+        print(f"{bench_path}: no rows with features + measured_s",
+              file=sys.stderr)
+        return 1
+    fit_rows = list(rows)
+    for h in args.history:
+        fit_rows.extend(collect_rows(json.loads(
+            pathlib.Path(h).read_text())))
+
+    consts = fit(fit_rows)
+    cur = ratios(rows, consts)
+    print(f"calibrated over {len(fit_rows)} row(s): " +
+          ", ".join(f"{k}={consts[k]:.3e}" for k in CONSTANT_KEYS))
+
+    calibration = dict(consts)
+    calibration["n_rows"] = len(fit_rows)
+    calibration["rows"] = {
+        name: {"measured_s": row["measured_s"],
+               "predicted_nominal_s": row.get("predicted_s"),
+               "predicted_calibrated_s": predict_calibrated(row, consts),
+               "ratio": cur[name]}
+        for name, row in rows}
+    pathlib.Path(args.out).write_text(json.dumps(calibration, indent=2))
+
+    if args.apply:
+        for name, row in rows:
+            row["predicted_calibrated_s"] = predict_calibrated(row, consts)
+        report["calibration"] = consts
+        bench_path.write_text(json.dumps(report, indent=2))
+
+    if args.write_baseline:
+        pathlib.Path(args.write_baseline).write_text(json.dumps(
+            {"constants": consts, "ratios": cur,
+             "tolerance": args.tolerance or 3.0},
+            indent=2))
+        print(f"baseline written to {args.write_baseline}")
+
+    if args.gate:
+        base = json.loads(pathlib.Path(args.baseline).read_text())
+        tolerance = args.tolerance or float(base.get("tolerance", 3.0))
+        print(f"gating against {args.baseline} "
+              f"(tolerance ×{tolerance}):")
+        failures = gate(cur, base["ratios"], tolerance)
+        if failures:
+            for f_ in failures:
+                print(f"GATE FAIL: {f_}", file=sys.stderr)
+            return 1
+        print("gate ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,6 +14,8 @@ from .events import (BlockingContext, EventCounter,
                      increase_current_task_event_counter,
                      decrease_task_event_counter, current_task)
 from .polling import PollingRegistry
+from . import continuations
+from .continuations import Continuation, ContinuationEngine
 from .taskgraph import Task, TaskGraph
 from .executor import TaskRuntime, TaskError
 from . import tac
@@ -25,7 +27,7 @@ from . import overlap
 from .schedule import Schedule, build_neighbor, best_schedule
 from .collectives import (Collectives, CollectiveHandle, HaloExchange,
                           HierarchicalCollectives, PersistentCollective)
-from .tac import CommWorld, CommGroup, CartGroup
+from .tac import CommWorld, CommGroup, CartGroup, DistGraphGroup
 
 __all__ = [
     # pause/resume API (§4.1)
@@ -35,6 +37,8 @@ __all__ = [
     "decrease_task_event_counter",
     # polling services API (§4.2) — register/unregister live on the registry
     "PollingRegistry",
+    # continuation-based completion notification (poll-free progress)
+    "continuations", "Continuation", "ContinuationEngine",
     # runtime
     "Task", "TaskGraph", "TaskRuntime", "TaskError", "BlockingContext",
     "EventCounter", "current_task",
@@ -44,7 +48,7 @@ __all__ = [
     "schedule", "lowering", "overlap", "Schedule", "build_neighbor",
     "best_schedule",
     # sub-communicators + neighbourhood collectives
-    "CommWorld", "CommGroup", "CartGroup", "HaloExchange",
+    "CommWorld", "CommGroup", "CartGroup", "DistGraphGroup", "HaloExchange",
     "HierarchicalCollectives",
     # persistent collectives (MPI_*_init analogue)
     "PersistentCollective",

@@ -247,29 +247,83 @@ class _Machine:
 
 
 class ProgressEngine:
-    """Drains event-bound collective machines from the polling service.
+    """Advances event-bound collective machines to completion.
 
-    The notification engine of the follow-on papers: completion is detected
-    and *continued* (next rounds posted, results combined, dependencies
-    released) by the runtime's polling threads, never by a blocked caller.
+    The notification engine of the follow-on papers (*Callback-based
+    Completion Notification using MPI Continuations*; *MPI Progress For
+    All*): completion is detected and *continued* (next rounds posted,
+    results combined, dependencies released) by the runtime's progress
+    threads, never by a blocked caller.  Two backends:
+
+    * ``notify="polling"`` — a registered polling service re-``advance``s
+      every pending machine each tick: O(in-flight machines) handle
+      tests per poll (``stats["tests"]`` counts them).
+    * ``notify="continuation"`` — each machine, when it parks on an
+      incomplete wait, **re-arms a continuation on its next awaited
+      handle(s)** via the runtime's
+      :class:`repro.core.continuations.ContinuationEngine`; the machine
+      is advanced exactly when something it waits on completes — O(1)
+      dispatches per completion, zero re-polling, no machine list at
+      all.  Event-bound dependency release
+      (:func:`repro.core.events.decrease_task_event_counter`) fires from
+      the continuation callback (inside :meth:`_Machine.advance`).
+
+    ``stats``: ``polls`` (service invocations), ``tests`` (machines
+    re-advanced by polling — the O(in-flight × ticks) term), ``rearms``
+    (continuations armed — O(completions)).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, notify: str = "polling",
+                 continuations: Any = None) -> None:
+        if notify not in ("polling", "continuation"):
+            raise ValueError(f"unknown notify backend {notify!r}")
+        if notify == "continuation" and continuations is None:
+            raise ValueError('notify="continuation" needs a '
+                             'ContinuationEngine (continuations=)')
+        self.notify = notify
+        self._continuations = continuations
         self._lock = threading.Lock()
         self._machines: List[_Machine] = []
+        self._armed = 0
+        self.stats: Dict[str, int] = {"polls": 0, "tests": 0, "rearms": 0}
 
     def submit(self, machine: _Machine) -> None:
         # First advance on the caller's thread (posts the initial sends);
-        # the machine only becomes visible to the poller if still pending,
-        # so `advance` never runs concurrently.
+        # the machine only becomes visible to the poller/continuation if
+        # still pending, so `advance` never runs concurrently.
         if machine.advance():
+            return
+        if self.notify == "continuation":
+            with self._lock:
+                self._armed += 1
+            self._arm(machine)
             return
         with self._lock:
             self._machines.append(machine)
 
+    # -- continuation backend ----------------------------------------------
+    def _arm(self, machine: _Machine) -> None:
+        """Attach a continuation to the machine's next awaited handles."""
+        w = machine._waiting
+        handles = list(w) if isinstance(w, (list, tuple)) else [w]
+        with self._lock:
+            self.stats["rearms"] += 1
+        self._continuations.attach(
+            handles, lambda: self._continue(machine))
+
+    def _continue(self, machine: _Machine) -> None:
+        if machine.advance():
+            with self._lock:
+                self._armed -= 1
+        else:
+            self._arm(machine)
+
+    # -- polling backend ----------------------------------------------------
     def poll(self, _data: Any) -> bool:
         with self._lock:
             snapshot = list(self._machines)
+            self.stats["polls"] += 1
+            self.stats["tests"] += len(snapshot)
         finished = [m for m in snapshot if m.advance()]
         if finished:
             with self._lock:
@@ -280,7 +334,7 @@ class ProgressEngine:
     @property
     def pending(self) -> int:
         with self._lock:
-            return len(self._machines)
+            return len(self._machines) + self._armed
 
 
 def _engine(runtime) -> ProgressEngine:
@@ -289,9 +343,16 @@ def _engine(runtime) -> ProgressEngine:
         with runtime._lock:
             eng = getattr(runtime, "_coll_engine", None)
             if eng is None:
-                eng = ProgressEngine()
-                runtime.polling.register_polling_service(
-                    "collective progress engine", eng.poll, None)
+                if getattr(runtime, "notify", "polling") == "continuation":
+                    # Machines ride the runtime's continuation engine —
+                    # its single service; nothing new to register.
+                    eng = ProgressEngine(
+                        notify="continuation",
+                        continuations=runtime.continuations)
+                else:
+                    eng = ProgressEngine()
+                    runtime._register_service(
+                        "collective progress engine", eng.poll)
                 runtime._coll_engine = eng  # type: ignore[attr-defined]
     return eng
 
@@ -901,7 +962,8 @@ def _topology_dirs(comm, rank: int):
     if neighbor_dirs is None:
         raise TypeError(
             "neighbourhood collectives need a communicator with a "
-            "Cartesian topology — build one with CommWorld.cart_create")
+            "topology — build a Cartesian one with CommWorld.cart_create "
+            "or a graph one with CommWorld.dist_graph_create")
     return tuple(neighbor_dirs(rank))
 
 
@@ -919,7 +981,8 @@ def _neighbor_schedule(comm) -> Schedule:
         if topology is None:
             raise TypeError(
                 "neighbourhood collectives need a communicator with a "
-                "Cartesian topology — build one with CommWorld.cart_create")
+                "topology — build a Cartesian one with CommWorld.cart_create "
+                "or a graph one with CommWorld.dist_graph_create")
         sched = schedule_ir.build_neighbor(topology())
         comm._neighbor_sched = sched
     return sched

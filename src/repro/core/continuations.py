@@ -1,0 +1,318 @@
+"""Continuation-based completion notification (poll-free progress).
+
+The polling registry (paper §4.2/§4.5) drives completion by *re-testing*
+every in-flight operation each tick — O(in-flight ops) work per poll even
+when nothing completed.  Two follow-on papers eliminate that overhead:
+
+* *Callback-based Completion Notification using MPI Continuations*
+  (Schuchart et al., EuroMPI'20): attach a callback to one request or a
+  set of requests; the library invokes it **once**, at completion time,
+  and the continuation request is itself testable/waitable so
+  continuations chain.
+* *MPI Progress For All* (Zhou et al.): completion work is executed by
+  whichever thread is making progress — a dedicated progress thread or
+  an otherwise-idle worker — from bounded completion queues, not by the
+  operation's poster.
+
+This module is that notification engine for the host runtime:
+
+* :meth:`ContinuationEngine.attach(handles, callback)` registers a
+  callback on one handle or a set of handles.  Handles that support
+  **push** notification (anything with an ``on_complete`` method —
+  :class:`repro.core.tac.EventHandle` and all its subclasses, including
+  every CommWorld send/recv handle and :class:`CollectiveHandle`;
+  :class:`repro.core.tac.FutureHandle` via
+  ``Future.add_done_callback``) notify the engine *at match time*: zero
+  tests ever run for them.  Handles without a hook (e.g. JAX
+  :class:`~repro.core.tac.ArrayHandle`) fall back to the engine's
+  poll list — the only place the engine still tests anything.
+
+* Completion does **not** run the callback inline on the completing
+  thread (which may hold communicator locks); the ready record is pushed
+  onto a **bounded completion queue** and dispatched either by the
+  dedicated poller (the engine registers ONE polling service total — not
+  one per operation) or opportunistically by idle workers and at the
+  runtime's scheduling points (:class:`repro.core.executor.TaskRuntime`
+  drains the queue in ``submit``/``taskwait``).  When the queue is full
+  the completing thread dispatches the overflowing record inline — the
+  back-pressure discipline of the Continuations paper's bounded queues.
+
+* :meth:`attach` returns a :class:`Continuation` — itself a
+  testable/waitable ``AsyncHandle`` that completes once the callback has
+  run, so continuations chain (``attach(prev_continuation, next_cb)``)
+  and task-aware waits (:func:`repro.core.tac.wait` /
+  :func:`~repro.core.tac.iwait`) accept one anywhere they accept an
+  operation handle.
+
+The engine keeps honest counters (``stats``): with N in-flight
+event-bound operations the continuation path performs **O(completions)**
+callback dispatches, where the polling path performs **O(in-flight ×
+ticks)** tests — the scaling claim `benchmarks/overlap_bench.py`
+measures and `tests/test_continuations.py` asserts.
+"""
+
+from __future__ import annotations
+
+import collections
+import sys
+import threading
+import traceback
+from typing import Any, Callable, List, Optional, Sequence
+
+__all__ = ["PushCompletion", "Continuation", "ContinuationEngine"]
+
+
+class PushCompletion:
+    """Fire-once completion event with **push** callbacks.
+
+    The shared machinery behind every push-capable handle
+    (:class:`repro.core.tac.EventHandle` and :class:`Continuation`):
+    :meth:`on_complete` registers a callback that fires exactly once, at
+    completion time — immediately when already complete.  Subclasses
+    complete through :meth:`_complete_once`, whose ``assign`` hook sets
+    their result fields *under the same lock* that publishes the event,
+    so a racing ``on_complete`` can never observe a set event with
+    unassigned results.  Completion is idempotent: the first completion
+    wins and fires the callbacks exactly once.
+    """
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self._cbs: List[Callable] = []
+        self._cb_lock = threading.Lock()
+
+    def test(self) -> bool:
+        return self._event.is_set()
+
+    def on_complete(self, cb: Callable[[Any], None]) -> None:
+        """Invoke ``cb(self)`` at completion (immediately if complete)."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._cbs.append(cb)
+                return
+        cb(self)
+
+    def _complete_once(self, assign: Callable[[], None]) -> None:
+        with self._cb_lock:
+            if self._event.is_set():
+                return
+            assign()
+            self._event.set()
+            cbs, self._cbs = self._cbs, []
+        for cb in cbs:
+            cb(self)
+
+
+class Continuation(PushCompletion):
+    """Completion handle of one attached callback (testable/waitable).
+
+    Mirrors the :class:`repro.core.tac.AsyncHandle` protocol — ``test``,
+    ``wait``, ``result`` — plus the ``on_complete`` push hook, so a
+    continuation can be waited on task-aware, bound to an event counter,
+    or itself continued (chaining).  ``result`` is the attached handle's
+    result (a list, in attachment order, when several handles were
+    attached); a raising callback stores its exception in ``error`` and
+    ``result`` re-raises it on the consumer.
+    """
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._result: Any = None
+        self.error: Optional[BaseException] = None
+
+    def wait(self) -> Any:
+        self._event.wait()
+        return self.result
+
+    @property
+    def result(self) -> Any:
+        if self.error is not None:
+            raise self.error
+        return self._result
+
+    def _fire(self, result: Any, error: Optional[BaseException]) -> None:
+        def assign() -> None:
+            self._result = result
+            self.error = error
+        self._complete_once(assign)
+
+
+class _Pending:
+    """One attach(): handles still in flight + the callback to dispatch."""
+
+    __slots__ = ("handles", "callback", "continuation", "_remaining",
+                 "_lock")
+
+    def __init__(self, handles: List[Any], callback: Callable[[], Any],
+                 continuation: Continuation) -> None:
+        self.handles = handles
+        self.callback = callback
+        self.continuation = continuation
+        self._remaining = len(handles)
+        self._lock = threading.Lock()
+
+    def _arrived(self) -> bool:
+        """Count one handle completion; True when the set is complete."""
+        with self._lock:
+            self._remaining -= 1
+            return self._remaining == 0
+
+
+class ContinuationEngine:
+    """Completion queues + dispatch for attached callbacks.
+
+    One engine serves a whole runtime through a single registered polling
+    service (:meth:`service`); operations never register services of
+    their own.  Push-capable handles cost zero tests; push-less handles
+    are polled from the engine's fallback list.  ``stats`` counts:
+
+    * ``attached``     — :meth:`attach` calls,
+    * ``completions``  — attachment sets that became ready,
+    * ``dispatches``   — callbacks run (== completions, eventually),
+    * ``inline_dispatches`` — dispatches run by the completing thread
+      because the bounded queue was full (subset of ``dispatches``),
+    * ``tests``        — poll-fallback handle tests (0 when every handle
+      pushes),
+    * ``callback_errors`` — callbacks that raised (error captured on the
+      continuation, never on the dispatching thread).
+    """
+
+    def __init__(self, *, queue_capacity: int = 1024) -> None:
+        if queue_capacity < 1:
+            raise ValueError(f"queue_capacity must be >= 1, got "
+                             f"{queue_capacity}")
+        self.queue_capacity = queue_capacity
+        self._lock = threading.Lock()
+        self._queue: collections.deque = collections.deque()
+        self._polled: List[tuple] = []      # (handle, _Pending) fallbacks
+        self.stats = {"attached": 0, "completions": 0, "dispatches": 0,
+                      "inline_dispatches": 0, "tests": 0,
+                      "callback_errors": 0}
+
+    # -- the user-facing API ------------------------------------------------
+    def attach(self, handles: Any,
+               callback: Callable[[], Any]) -> Continuation:
+        """Attach ``callback`` to one handle or a set of handles.
+
+        The callback takes no arguments (close over what you need) and
+        runs exactly once, after **all** attached handles completed — on
+        a dispatching thread (poller, idle worker, or a scheduling
+        point), not on the completing one.  Returns the
+        :class:`Continuation`, complete once the callback ran.
+        """
+        if isinstance(handles, (list, tuple)):
+            hs = list(handles)
+        else:
+            hs = [handles]
+        if not hs:
+            raise ValueError("attach() needs at least one handle")
+        rec = _Pending(hs, callback, Continuation())
+        with self._lock:
+            self.stats["attached"] += 1
+        for h in hs:
+            push = getattr(h, "on_complete", None)
+            if callable(push):
+                # Push path: the handle calls back at match time — this
+                # operation is never tested again.
+                push(lambda _h, rec=rec: self._arrived(rec))
+            else:
+                with self._lock:
+                    self._polled.append((h, rec))
+        return rec.continuation
+
+    # -- completion ---------------------------------------------------------
+    def _arrived(self, rec: _Pending) -> None:
+        if not rec._arrived():
+            return
+        inline = False
+        with self._lock:
+            self.stats["completions"] += 1
+            if len(self._queue) >= self.queue_capacity:
+                inline = True           # bounded queue full: run it here
+            else:
+                self._queue.append(rec)
+        if inline:
+            with self._lock:
+                self.stats["inline_dispatches"] += 1
+            self._run(rec)
+
+    def _run(self, rec: _Pending) -> None:
+        with self._lock:
+            self.stats["dispatches"] += 1
+        try:
+            rec.callback()
+        except Exception as exc:
+            # A raising callback must not kill the dispatching thread —
+            # but its continuation may be unreferenced (the wait/iwait
+            # wiring discards it), so ALSO report loudly: a swallowed
+            # unblock/decrease failure would otherwise hang taskwait
+            # with no trace.  KeyboardInterrupt/SystemExit propagate.
+            with self._lock:
+                self.stats["callback_errors"] += 1
+            traceback.print_exc()
+            print("continuation callback failed (error stored on the "
+                  "continuation; see traceback above)", file=sys.stderr)
+            rec.continuation._fire(None, exc)
+            return
+        try:
+            # A handle's `result` may itself re-raise (a failed
+            # CollectiveHandle, a FutureHandle whose future errored);
+            # that is consumer-visible by design — store it quietly, the
+            # continuation's reader re-raises it.
+            results = [getattr(h, "result", None) for h in rec.handles]
+        except Exception as exc:
+            with self._lock:
+                self.stats["callback_errors"] += 1
+            rec.continuation._fire(None, exc)
+            return
+        rec.continuation._fire(
+            results[0] if len(results) == 1 else results, None)
+
+    # -- dispatch -----------------------------------------------------------
+    def dispatch(self, max_items: Optional[int] = None) -> int:
+        """Drain the completion queue; returns #callbacks run.
+
+        Callbacks may themselves complete further handles (a progress
+        cascade); those land back on the queue and are drained in the
+        same call — total work stays O(completions).
+        """
+        n = 0
+        while max_items is None or n < max_items:
+            with self._lock:
+                if not self._queue:
+                    break
+                rec = self._queue.popleft()
+            self._run(rec)
+            n += 1
+        return n
+
+    def service(self, _data: Any = None) -> bool:
+        """The ONE polling service: test fallbacks, drain the queue."""
+        with self._lock:
+            snapshot = list(self._polled)
+        if snapshot:
+            with self._lock:
+                self.stats["tests"] += len(snapshot)
+            done = [item for item in snapshot if item[0].test()]
+            if done:
+                done_ids = {id(item) for item in done}
+                with self._lock:
+                    self._polled = [p for p in self._polled
+                                    if id(p) not in done_ids]
+                for _, rec in done:
+                    self._arrived(rec)
+        self.dispatch()
+        return False                    # stay registered
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def queued(self) -> int:
+        """Ready records awaiting dispatch."""
+        with self._lock:
+            return len(self._queue)
+
+    @property
+    def polled(self) -> int:
+        """Push-less handles on the fallback poll list."""
+        with self._lock:
+            return len(self._polled)

@@ -43,15 +43,19 @@ Additional production features beyond the paper:
 from __future__ import annotations
 
 import collections
+import os
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import events as _ev
+from .continuations import ContinuationEngine
 from .events import BlockingContext, set_current_task, current_task
 from .polling import PollingRegistry
 from .taskgraph import (Task, TaskGraph, CREATED, READY, RUNNING, BLOCKED,
                         FINISHED, RELEASED)
+
+NOTIFY_BACKENDS = ("polling", "continuation")
 
 
 class TaskError(RuntimeError):
@@ -70,11 +74,20 @@ class TaskRuntime:
                  poll_interval: float = 0.001,
                  block_mode: str = "spare-thread",
                  max_threads: Optional[int] = None,
-                 speculative_timeout: Optional[float] = None) -> None:
+                 speculative_timeout: Optional[float] = None,
+                 notify: Optional[str] = None) -> None:
         if block_mode not in ("spare-thread", "nested"):
             raise ValueError(f"unknown block_mode {block_mode!r}")
+        if notify is None:
+            # env override lets the whole tier-1 suite run under either
+            # backend unchanged (CI exercises REPRO_NOTIFY=continuation).
+            notify = os.environ.get("REPRO_NOTIFY") or "polling"
+        if notify not in NOTIFY_BACKENDS:
+            raise ValueError(f"unknown notify backend {notify!r}; "
+                             f"one of {NOTIFY_BACKENDS}")
         self.num_workers = num_workers
         self.block_mode = block_mode
+        self.notify = notify
         self.poll_interval = poll_interval
         self.max_threads = max_threads or num_workers + 512
         self.speculative_timeout = speculative_timeout
@@ -93,6 +106,47 @@ class TaskRuntime:
         self._errors: List[TaskError] = []
         self._shutdown = False
         self._started = False
+        self._continuations: Optional[ContinuationEngine] = None
+        self._registered_services: List[Tuple[str, Callable, Any]] = []
+
+    # -- polling-service bookkeeping ---------------------------------------
+    def _register_service(self, name: str, fn: Callable,
+                          data: Any = None) -> None:
+        """Register a polling service AND remember it, so :meth:`close`
+        can unregister deterministically — a failed collective or a
+        restarted runtime must not leave services behind (asserted by
+        the tier-1 stress tests)."""
+        with self._lock:
+            self._registered_services.append((name, fn, data))
+        self.polling.register_polling_service(name, fn, data)
+
+    @property
+    def continuations(self) -> ContinuationEngine:
+        """The runtime's completion-notification engine (lazy).
+
+        One engine — and ONE registered polling service — per runtime,
+        shared by :func:`repro.core.tac.wait`/``iwait`` tickets and the
+        collectives :class:`~repro.core.collectives.ProgressEngine`
+        under ``notify="continuation"``.  Ready callbacks are dispatched
+        by the dedicated poller, by idle workers (§4.5), and at the
+        scheduling points (``submit``/``taskwait``) which drain the
+        bounded completion queue.
+        """
+        eng = self._continuations
+        if eng is None:
+            with self._lock:
+                eng = self._continuations
+                if eng is None:
+                    eng = ContinuationEngine()
+                    self._register_service("continuation engine",
+                                           eng.service)
+                    self._continuations = eng
+        return eng
+
+    def _drain_continuations(self) -> None:
+        eng = self._continuations
+        if eng is not None:
+            eng.dispatch()
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> None:
@@ -104,8 +158,8 @@ class TaskRuntime:
                 self._spawn_worker_locked()
         self.polling.start()
         if self.speculative_timeout is not None:
-            self.polling.register_polling_service(
-                "straggler-watch", self._straggler_service, None)
+            self._register_service("straggler-watch",
+                                   self._straggler_service)
 
     def close(self) -> None:
         with self._cv:
@@ -113,6 +167,16 @@ class TaskRuntime:
             self._cv.notify_all()
         for t in list(self._threads):
             t.join(timeout=5.0)
+        # Deterministic teardown: every service this runtime registered
+        # (TAC ticket pool, collective progress engine, continuation
+        # engine, straggler watch) is unregistered — including after
+        # failed machines — so nothing stays registered forever.
+        with self._lock:
+            services, self._registered_services = \
+                self._registered_services, []
+        for name, fn, data in services:
+            self.polling.unregister_polling_service(name, fn, data)
+        self._drain_continuations()   # callbacks queued after last poll
         self.polling.stop()
 
     def __enter__(self) -> "TaskRuntime":
@@ -142,6 +206,9 @@ class TaskRuntime:
         ready = self.graph.register(task, in_, out, inout)
         if ready:
             self._enqueue(task)
+        # Task creation is a scheduling point (§4.4): serve any ready
+        # continuation callbacks opportunistically on this thread.
+        self._drain_continuations()
         return task
 
     # alias mirroring `#pragma oss task`
@@ -156,9 +223,14 @@ class TaskRuntime:
         if current_task() is not None:
             raise RuntimeError("taskwait() from inside a task is not "
                                "supported; use dependencies instead")
-        with self._cv:
-            while self._unreleased > 0:
+        while True:
+            with self._cv:
+                if self._unreleased <= 0:
+                    break
                 self._cv.wait(timeout=0.05)
+            # taskwait is a scheduling point: drain ready continuations
+            # so completion never waits on the dedicated poller alone.
+            self._drain_continuations()
         self._raise_errors()
 
     def _raise_errors(self) -> None:

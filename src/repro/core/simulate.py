@@ -99,15 +99,27 @@ class SimResult:
 
 
 class Simulator:
-    """List-scheduling discrete-event simulator over per-rank worker pools."""
+    """List-scheduling discrete-event simulator over per-rank worker pools.
+
+    ``dispatch_overhead`` models the completion-notification cost of the
+    continuation backend (:mod:`repro.core.continuations`): when the
+    *last* pending event of a task arrives, its completion callback is
+    dispatched from the engine's queue ``dispatch_overhead`` seconds
+    later — the per-completion term of :func:`progress_cost`.  The
+    polling backend's per-tick re-test cost is not an event in this DAG
+    model (it scales with wall time, not with the graph); use
+    :func:`progress_cost` to account for it analytically.
+    """
 
     def __init__(self, n_ranks: int, workers_per_rank: int, *,
                  task_overhead: float = 0.0,
-                 resume_overhead: float = 0.0) -> None:
+                 resume_overhead: float = 0.0,
+                 dispatch_overhead: float = 0.0) -> None:
         self.n_ranks = n_ranks
         self.workers = workers_per_rank
         self.task_overhead = task_overhead
         self.resume_overhead = resume_overhead
+        self.dispatch_overhead = dispatch_overhead
 
     def run(self, tasks: List[SimTask]) -> SimResult:
         byid = {t.id: t for t in tasks}
@@ -270,16 +282,24 @@ class Simulator:
             elif kind == "event-arr":
                 task._pending_events -= 1
                 if task._pending_events == 0 and task._body_done_at is not None:
-                    if task.kind == COMM_HELD:
-                        held[r] += now - task._body_done_at
-                        busy[r] += now - task._body_done_at
-                        free[r] += 1
-                        finish(task, now)
-                    elif task.kind == COMM_PAUSED:
-                        resume_q[r].append(task)
-                    elif task.kind == COMM_EVENTS:
-                        finish(task, now)
-                    dirty.add(r)
+                    if self.dispatch_overhead > 0.0:
+                        # Continuation backend: the completion callback is
+                        # dispatched from the queue, one overhead later.
+                        push(now + self.dispatch_overhead, "event-fire",
+                             task.id)
+                    else:
+                        push(now, "event-fire", task.id)
+            elif kind == "event-fire":
+                if task.kind == COMM_HELD:
+                    held[r] += now - task._body_done_at
+                    busy[r] += now - task._body_done_at
+                    free[r] += 1
+                    finish(task, now)
+                elif task.kind == COMM_PAUSED:
+                    resume_q[r].append(task)
+                elif task.kind == COMM_EVENTS:
+                    finish(task, now)
+                dirty.add(r)
             elif kind == "resume-done":
                 free[r] += 1
                 finish(task, now)
@@ -299,6 +319,40 @@ class Simulator:
                          done_times={t.id: t.done_time for t in tasks},
                          busy_time=busy, held_wait_time=held,
                          max_paused=max_paused, resumes=resumes)
+
+
+# ---------------------------------------------------------------------------
+# Progress-path cost: the α-β term of the two notification backends
+# ---------------------------------------------------------------------------
+def progress_cost(backend: str, *, in_flight: float, ticks: float,
+                  completions: float, test_s: float,
+                  dispatch_s: float) -> float:
+    """Analytic progress-engine cost of one notification backend.
+
+    The α-β model's missing term: moving bytes is only part of a
+    communication task's cost — somebody must also *notice* completions.
+
+    * ``"polling"`` — the registry re-tests every in-flight operation
+      each tick and pays a dispatch per completion:
+      ``test_s·in_flight·ticks + dispatch_s·completions``.  Per tick the
+      cost is **linear in the number of in-flight operations**, even
+      when nothing completed.
+    * ``"continuation"`` — completions are pushed at match time and only
+      ready callbacks are dispatched: ``dispatch_s·completions``.  Per
+      tick the cost is **flat** (zero when nothing completed), total
+      work O(completions) regardless of how many operations are parked.
+
+    The discrete-event counterpart of the dispatch term is
+    ``Simulator(dispatch_overhead=dispatch_s)``;
+    ``benchmarks/overlap_bench.py`` measures both backends against this
+    model over an in-flight sweep.
+    """
+    if backend == "continuation":
+        return dispatch_s * completions
+    if backend == "polling":
+        return test_s * in_flight * ticks + dispatch_s * completions
+    raise ValueError(f"unknown backend {backend!r}; "
+                     f"one of ('polling', 'continuation')")
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
+from .continuations import PushCompletion
 from .events import (current_task, get_current_blocking_context,
                      get_current_event_counter,
                      increase_current_task_event_counter,
@@ -112,19 +113,28 @@ class ArrayHandle(AsyncHandle):
         return self._result
 
 
-class EventHandle(AsyncHandle):
-    """A manually completed handle (asynchronous host work, I/O, ...)."""
+class EventHandle(PushCompletion, AsyncHandle):
+    """A manually completed handle (asynchronous host work, I/O, ...).
+
+    Supports **push** completion notification
+    (:class:`repro.core.continuations.PushCompletion`):
+    :meth:`~repro.core.continuations.PushCompletion.on_complete`
+    registers a callback that :meth:`complete` invokes at match time —
+    the hook the continuation engine uses to make progress
+    O(completions) instead of O(in-flight ops) per poll.  ``complete``
+    is idempotent (the first completion wins and fires the callbacks
+    exactly once) — a buffered send may be locally complete before its
+    match confirms it.
+    """
 
     def __init__(self) -> None:
-        self._event = threading.Event()
+        super().__init__()
         self._result: Any = None
 
     def complete(self, result: Any = None) -> None:
-        self._result = result
-        self._event.set()
-
-    def test(self) -> bool:
-        return self._event.is_set()
+        def assign() -> None:
+            self._result = result
+        self._complete_once(assign)
 
     def wait(self) -> Any:
         self._event.wait()
@@ -142,6 +152,10 @@ class FutureHandle(AsyncHandle):
 
     def wait(self) -> Any:
         return self._future.result()
+
+    def on_complete(self, cb: Callable[["FutureHandle"], None]) -> None:
+        """Push notification via ``Future.add_done_callback``."""
+        self._future.add_done_callback(lambda _f: cb(self))
 
     @property
     def result(self) -> Any:
@@ -224,28 +238,34 @@ class CommWorld:
             raise ValueError(f"rank out of range: {src}->{dst}")
         h = _SendHandle(payload, synchronous)
         key = self._key(src, dst, tag)
+        matched = None
         with self._lock:
             self.stats["messages"] += 1
             recvs = self._recvs.get(key)
             if recvs:
-                r = recvs.pop(0)
-                r.complete(payload)
-                h.complete(payload)
+                matched = recvs.pop(0)
             else:
                 self._msgs.setdefault(key, []).append(h)
+        if matched is not None:
+            # Complete OUTSIDE the world lock: completion may push a
+            # continuation whose dispatch posts messages (needs the lock).
+            matched.complete(payload)
+            h.complete(payload)
         return h
 
     def irecv(self, *, src: int, dst: int, tag: Any = 0) -> _RecvHandle:
         key = self._key(src, dst, tag)
         r = _RecvHandle()
+        matched = None
         with self._lock:
             msgs = self._msgs.get(key)
             if msgs:
-                s = msgs.pop(0)
-                s.complete(s.payload)
-                r.complete(s.payload)
+                matched = msgs.pop(0)
             else:
                 self._recvs.setdefault(key, []).append(r)
+        if matched is not None:
+            matched.complete(matched.payload)   # outside the lock (see isend)
+            r.complete(matched.payload)
         return r
 
     # Blocking conveniences (intercepted like MPI_Recv/MPI_Ssend, Fig. 3).
@@ -333,6 +353,30 @@ class CommWorld:
                              f" world has {self.size}")
         return CartGroup(self, range(n), ("cart", next(self._group_seq)),
                          dims, periodic)
+
+    def dist_graph_create(
+            self, adjacency: Sequence[Sequence[int]]) -> "DistGraphGroup":
+        """Distributed-graph sub-communicator over the first
+        ``len(adjacency)`` ranks (the ``MPI_Dist_graph_create_adjacent``
+        analogue for unstructured meshes).
+
+        ``adjacency[r]`` lists rank ``r``'s neighbours (group-local
+        numbering).  Like :meth:`cart_create` the construction is
+        central: build once, share the group.  The adjacency must be
+        symmetric (every edge declared by both endpoints — the
+        ``sources == destinations`` case of the MPI call, which is what
+        an unstructured-mesh halo exchange needs) and self-loop-free.
+        The group's :meth:`DistGraphGroup.topology` feeds
+        :func:`repro.core.schedule.build_neighbor` exactly like a
+        Cartesian grid's, so :class:`~repro.core.collectives.HaloExchange`
+        and ``Collectives.neighbor_alltoall`` work unchanged over it.
+        """
+        n = len(adjacency)
+        if n > self.size:
+            raise ValueError(f"graph with {n} ranks exceeds world size "
+                             f"{self.size}")
+        return DistGraphGroup(self, range(n),
+                              ("graph", next(self._group_seq)), adjacency)
 
 
 class GroupHandle(EventHandle):
@@ -431,7 +475,23 @@ class CommGroup:
         wait(self.isend(payload, src=src, dst=dst, tag=tag, synchronous=True))
 
 
-class CartGroup(CommGroup):
+class _NeighborTopology:
+    """Shared ``topology()`` for groups with persistent neighbour lists
+    (:class:`CartGroup`, :class:`DistGraphGroup`)."""
+
+    def topology(self):
+        """All ranks' neighbour lists as one hashable tuple.
+
+        ``topology()[r] == tuple(neighbor_dirs(r))`` — the value that
+        keys the cached neighbourhood schedule
+        (:func:`repro.core.schedule.build_neighbor`): two topologies of
+        the same shape share one schedule object.
+        """
+        return tuple(tuple(self.neighbor_dirs(r))
+                     for r in range(self.size))
+
+
+class CartGroup(_NeighborTopology, CommGroup):
     """Cartesian process topology over a sub-communicator (MPI_Cart_create).
 
     Group-local ranks are laid out row-major over ``dims``; ``periodic``
@@ -519,15 +579,52 @@ class CartGroup(CommGroup):
         """Neighbour group ranks in ``neighbor_dirs`` order."""
         return [nbr for _, nbr in self.neighbor_dirs(rank)]
 
-    def topology(self) -> Tuple[Tuple[Tuple[Tuple[int, int], int], ...], ...]:
-        """All ranks' neighbour lists as one hashable tuple.
 
-        ``topology()[r] == tuple(neighbor_dirs(r))`` — the value that keys
-        the cached neighbourhood schedule
-        (:func:`repro.core.schedule.build_neighbor`): two grids of the
-        same shape share one schedule object.
-        """
-        return tuple(tuple(self.neighbor_dirs(r)) for r in range(self.size))
+class DistGraphGroup(_NeighborTopology, CommGroup):
+    """Unstructured-graph process topology (MPI_Dist_graph_create_adjacent).
+
+    The non-Cartesian sibling of :class:`CartGroup`: neighbour lists come
+    from an explicit symmetric adjacency instead of grid coordinates.  A
+    neighbour *direction* is ``((lo, hi), ±1)`` — the undirected edge's
+    endpoint pair plus which way along it this rank sends (``+1`` from
+    the lower-ranked endpoint) — so reciprocity holds exactly as on a
+    grid: rank ``r``'s direction ``d`` toward ``q`` is matched by ``q``'s
+    direction ``(d[0], -d[1])`` toward ``r``, which is what
+    :func:`repro.core.schedule.build_neighbor` requires of a topology.
+    """
+
+    def __init__(self, world: CommWorld, ranks: Sequence[int], gid: Any,
+                 adjacency: Sequence[Sequence[int]]) -> None:
+        super().__init__(world, ranks, gid)
+        adj = []
+        for r, nbrs in enumerate(adjacency):
+            nbrs = sorted({int(q) for q in nbrs})
+            for q in nbrs:
+                if not 0 <= q < self.size:
+                    raise ValueError(f"rank {r}: neighbour {q} out of "
+                                     f"range for graph size {self.size}")
+                if q == r:
+                    raise ValueError(f"rank {r}: self-loop in adjacency")
+            adj.append(tuple(nbrs))
+        self.adjacency = tuple(adj)
+        for r, nbrs in enumerate(self.adjacency):
+            for q in nbrs:
+                if r not in self.adjacency[q]:
+                    raise ValueError(
+                        f"asymmetric adjacency: {r} lists {q} but {q} "
+                        f"does not list {r} (every edge must be declared "
+                        f"by both endpoints)")
+
+    def neighbor_dirs(self, rank: int) -> List[Tuple[Tuple[Any, int], int]]:
+        """Persistent neighbour list ``[(((lo, hi), ±1), neighbour)]`` in
+        ascending-neighbour order (deterministic, like the grid's)."""
+        self._check(rank)
+        return [(((min(rank, q), max(rank, q)), 1 if rank < q else -1), q)
+                for q in self.adjacency[rank]]
+
+    def neighbors(self, rank: int) -> List[int]:
+        """Neighbour group ranks in ``neighbor_dirs`` order."""
+        return [nbr for _, nbr in self.neighbor_dirs(rank)]
 
 
 # ---------------------------------------------------------------------------
@@ -552,8 +649,7 @@ class _TicketPool:
     def __init__(self, runtime: TaskRuntime) -> None:
         self._lock = threading.Lock()
         self._tickets: List[_Ticket] = []
-        runtime.polling.register_polling_service(
-            "TAC ticket pool", self.poll, None)
+        runtime._register_service("TAC ticket pool", self.poll)
 
     def add(self, ticket: _Ticket) -> None:
         with self._lock:
@@ -594,20 +690,33 @@ def _pool(runtime: TaskRuntime) -> _TicketPool:
 # ---------------------------------------------------------------------------
 # The two interoperability modes
 # ---------------------------------------------------------------------------
+def _use_continuations(runtime: TaskRuntime) -> bool:
+    """True when the runtime's notification backend is the continuation
+    engine (``TaskRuntime(notify="continuation")``): completions are
+    *pushed* at match time and dispatched from bounded queues, instead of
+    the ticket pool re-``test``-ing every in-flight handle per poll."""
+    return getattr(runtime, "notify", "polling") == "continuation"
+
+
 def wait(handle: AsyncHandle) -> Any:
     """Task-aware blocking wait (§6.1, Fig. 3).
 
     Inside a task with TASK_MULTIPLE enabled: test; if incomplete, register a
     ticket and *pause the task* — the worker runs other ready tasks and the
     polling service resumes us on completion.  Otherwise: plain blocking wait
-    (the PMPI path).
+    (the PMPI path).  Under the continuation backend the resume fires from
+    the handle's completion callback — no ticket is ever re-tested.
     """
     task = current_task()
     if is_enabled() and task is not None:
         if handle.test():
             return handle.result
         ctx = get_current_blocking_context()
-        _pool(task._runtime).add(_Ticket(handle, waiter=ctx))
+        rt = task._runtime
+        if _use_continuations(rt):
+            rt.continuations.attach(handle, lambda: unblock_task(ctx))
+        else:
+            _pool(rt).add(_Ticket(handle, waiter=ctx))
         block_current_task(ctx)
         return handle.result
     handle.wait()
@@ -635,7 +744,12 @@ def iwait(handle: AsyncHandle) -> None:
             return
         cnt = get_current_event_counter()
         increase_current_task_event_counter(cnt, 1)
-        _pool(task._runtime).add(_Ticket(handle, counter=cnt))
+        rt = task._runtime
+        if _use_continuations(rt):
+            rt.continuations.attach(
+                handle, lambda: decrease_task_event_counter(cnt, 1))
+        else:
+            _pool(rt).add(_Ticket(handle, counter=cnt))
         return
     handle.wait()
 
@@ -649,9 +763,15 @@ def iwaitall(handles: Sequence[AsyncHandle]) -> None:
             return
         cnt = get_current_event_counter()
         increase_current_task_event_counter(cnt, len(pending))
-        pool = _pool(task._runtime)
-        for h in pending:
-            pool.add(_Ticket(h, counter=cnt))
+        rt = task._runtime
+        if _use_continuations(rt):
+            n = len(pending)
+            rt.continuations.attach(
+                pending, lambda: decrease_task_event_counter(cnt, n))
+        else:
+            pool = _pool(rt)
+            for h in pending:
+                pool.add(_Ticket(h, counter=cnt))
         return
     for h in handles:
         h.wait()

@@ -397,6 +397,85 @@ def test_halo_exchange_run_group_validation():
 
 
 # ---------------------------------------------------------------------------
+# distributed-graph topologies (MPI_Dist_graph_create_adjacent analogue)
+# ---------------------------------------------------------------------------
+# an unstructured 5-rank mesh: a triangle (0-1-2) with a tail (2-3-4)
+MESH = [(1, 2), (0, 2), (0, 1, 3), (2, 4), (3,)]
+
+
+def test_dist_graph_structure_and_reciprocity():
+    w = tac.CommWorld(5)
+    g = w.dist_graph_create(MESH)
+    assert g.size == 5
+    assert g.neighbors(2) == [0, 1, 3]
+    # reciprocity: r's direction d toward q matches q's (d[0], -d[1])
+    for r in range(g.size):
+        for d, q in g.neighbor_dirs(r):
+            assert ((d[0], -d[1]), r) in g.neighbor_dirs(q)
+    # topology() feeds build_neighbor: one validated schedule, cached by
+    # value (an isomorphic graph shares the object)
+    from repro.core import schedule as schedule_ir
+    sched = schedule_ir.build_neighbor(g.topology())
+    assert sched.n == 5
+    g2 = w.dist_graph_create(MESH)
+    assert schedule_ir.build_neighbor(g2.topology()) is sched
+
+
+def test_dist_graph_validation():
+    w = tac.CommWorld(4)
+    with pytest.raises(ValueError, match="asymmetric"):
+        w.dist_graph_create([(1,), (), (), ()])
+    with pytest.raises(ValueError, match="self-loop"):
+        w.dist_graph_create([(0, 1), (0,), (), ()])
+    with pytest.raises(ValueError, match="out of range"):
+        w.dist_graph_create([(3,), ()])
+    with pytest.raises(ValueError, match="exceeds world size"):
+        w.dist_graph_create([()] * 5)
+
+
+def test_dist_graph_halo_exchange_unstructured_mesh():
+    """HaloExchange over an unstructured mesh: every rank receives
+    exactly its graph neighbours' payloads (ROADMAP next-direction)."""
+    w = tac.CommWorld(5)
+    g = w.dist_graph_create(MESH)
+    hx = HaloExchange(g)
+    sends = [{d: np.array([10.0 * r + i])
+              for i, (d, _) in enumerate(hx.neighbors(r))}
+             for r in range(5)]
+    out = hx.run_group(sends)
+    for r in range(5):
+        assert set(out[r]) == {d for d, _ in hx.neighbors(r)}
+        for d, q in hx.neighbors(r):
+            # q sent toward its opposite direction (d[0], -d[1])
+            expect = sends[q][(d[0], -d[1])]
+            np.testing.assert_array_equal(out[r][d], expect)
+
+
+def test_dist_graph_neighbor_alltoall_event_mode_on_runtime():
+    w = tac.CommWorld(5)
+    g = w.dist_graph_create(MESH)
+    coll = Collectives(g)
+    got = {}
+
+    def comm(r):
+        def body():
+            sends = {d: np.float64(100 * r + q)
+                     for d, q in g.neighbor_dirs(r)}
+            got[r] = coll.neighbor_alltoall(sends, rank=r, mode="event",
+                                            key="g")
+        return body
+
+    with TaskRuntime(num_workers=2) as rt:
+        for r in range(5):
+            rt.submit(comm(r))
+        rt.taskwait()
+    for r in range(5):
+        res = got[r].result
+        for d, q in g.neighbor_dirs(r):
+            assert float(res[d]) == 100 * q + r
+
+
+# ---------------------------------------------------------------------------
 # hierarchical allreduce (the first consumer of split)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("n,gs", [(4, 2), (6, 3), (7, 3), (5, 2), (3, 5)])

@@ -547,6 +547,61 @@ def test_calibrate_fit_recovers_constants(tmp_path):
     assert "MISSING" in run.stdout
 
 
+def test_calibrate_history_directory_rolling_window(tmp_path):
+    """--history accepts a directory of per-run artifacts; the rolling
+    window keeps only the newest N (timestamped names sort
+    chronologically), so an ancient outlier stops influencing the fit."""
+    import json
+    import pathlib
+    import subprocess
+    import sys
+    sched = build("allreduce", "ring", 8)
+    size = 1 << 18
+
+    def report(measured):
+        feats = {"rounds": sched.cost(1.0, 0.0, 0.0),
+                 "wire_bytes": sched.cost(0.0, 1.0, size),
+                 "combine_bytes": sched.cost(0.0, 0.0, size, gamma=1.0)}
+        return {"modes": {"leg": {"features": feats,
+                                  "measured_s": measured}}}
+
+    true_s = 4e-9 * sched.cost(0.0, 1.0, size)
+    bench = tmp_path / "BENCH_overlap.json"
+    bench.write_text(json.dumps(report(true_s)))
+    hist = tmp_path / "bench-history"
+    hist.mkdir()
+    # oldest artifact is a wild outlier; the next three agree with today
+    (hist / "BENCH_overlap-20260101T000000Z.json").write_text(
+        json.dumps(report(true_s * 1e4)))
+    for i in range(1, 4):
+        (hist / f"BENCH_overlap-2026020{i}T000000Z.json").write_text(
+            json.dumps(report(true_s)))
+    tool = pathlib.Path(__file__).resolve().parents[1] / "tools" / \
+        "calibrate.py"
+    out = tmp_path / "CALIBRATION.json"
+
+    def fit(window):
+        run = subprocess.run(
+            [sys.executable, str(tool), "--bench", str(bench), "--out",
+             str(out), "--history", str(hist),
+             "--history-window", str(window)],
+            capture_output=True, text=True)
+        assert run.returncode == 0, run.stderr
+        data = json.loads(out.read_text())
+        return data, run.stdout
+    # window 3 drops the outlier: the fit matches today's measurement
+    data, stdout = fit(3)
+    assert data["n_rows"] == 4                       # bench + 3 newest
+    assert stdout.count("history:") == 3
+    assert "20260101T000000Z" not in stdout          # oldest pruned
+    assert data["rows"]["modes.leg"]["ratio"] == pytest.approx(1.0,
+                                                               rel=1e-6)
+    # window 0 (unlimited) lets the outlier drag the fit off
+    data, stdout = fit(0)
+    assert data["n_rows"] == 5 and stdout.count("history:") == 4
+    assert data["rows"]["modes.leg"]["ratio"] < 0.5
+
+
 def test_hierarchical_rejects_segments_at_both_levels():
     """Both executors refuse segments on the fixed composed schedule —
     silently dropping it would fake pipelining (Level B mirrors

@@ -26,9 +26,20 @@ machine, uniform speed differences cancel — a ratio drifting beyond
 a schedule serialising that used to overlap, a collective count
 regression, a cost-model break.
 
+**History** (rolling-window fits): ``--history`` accepts bench report
+FILES and/or DIRECTORIES of per-run artifacts (the bench-smoke CI job
+archives each run's ``BENCH_overlap.json`` under a timestamped name);
+directories are expanded to their ``*.json`` files sorted by name — with
+timestamped names that is chronological — and ``--history-window N``
+keeps only each directory's newest ``N`` artifacts (explicitly listed
+files are always kept), so the fit (and hence the gate's calibrated
+predictions) averages over a rolling window of recent runs instead of
+whipsawing on a single noisy one.
+
 Usage:
   python tools/calibrate.py [--bench BENCH_overlap.json]
-      [--history FILE ...] [--out CALIBRATION.json] [--apply]
+      [--history FILE_OR_DIR ...] [--history-window N]
+      [--out CALIBRATION.json] [--apply]
       [--write-baseline BENCH_baseline.json]
       [--gate --baseline BENCH_baseline.json --tolerance 3.0]
 """
@@ -39,7 +50,7 @@ import argparse
 import json
 import pathlib
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -60,6 +71,35 @@ def collect_rows(report: dict, prefix: str = "") -> List[Tuple[str, dict]]:
             rows.append((path, val))
         rows.extend(collect_rows(val, prefix=f"{path}."))
     return rows
+
+
+def history_files(paths: List[str],
+                  window: Optional[int] = None) -> List[pathlib.Path]:
+    """Expand ``--history`` arguments into bench-report files.
+
+    Each DIRECTORY contributes its ``*.json`` entries sorted by file
+    name (timestamped artifact names sort chronologically), truncated to
+    the NEWEST ``window`` of them — the rolling window.  Explicitly
+    listed FILES are always kept, in argument order: naming a report on
+    the command line is an explicit request to fit over it.  Paths that
+    do not exist are skipped with a warning — an empty history (the
+    first CI run, an evicted cache) must not break the fit over the
+    current bench report.
+    """
+    files: List[pathlib.Path] = []
+    for p in paths:
+        pp = pathlib.Path(p)
+        if pp.is_dir():
+            found = sorted(pp.glob("*.json"), key=lambda f: f.name)
+            if window is not None and window > 0:
+                found = found[-window:]
+            files.extend(found)
+        elif pp.is_file():
+            files.append(pp)
+        else:
+            print(f"warning: --history path {pp} does not exist; skipped",
+                  file=sys.stderr)
+    return files
 
 
 def nnls(A: np.ndarray, b: np.ndarray) -> np.ndarray:
@@ -136,7 +176,12 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--bench", default="BENCH_overlap.json")
     p.add_argument("--history", nargs="*", default=[],
-                   help="extra bench reports to include in the fit")
+                   help="extra bench reports to include in the fit: "
+                        "files and/or directories of per-run artifacts")
+    p.add_argument("--history-window", type=int, default=10,
+                   help="per --history DIRECTORY: keep only its newest N "
+                        "artifacts (rolling window; 0 = unlimited; "
+                        "explicitly listed files are always kept)")
     p.add_argument("--out", default="CALIBRATION.json")
     p.add_argument("--apply", action="store_true",
                    help="write predicted_calibrated_s into the bench json")
@@ -159,9 +204,10 @@ def main(argv=None) -> int:
               file=sys.stderr)
         return 1
     fit_rows = list(rows)
-    for h in args.history:
-        fit_rows.extend(collect_rows(json.loads(
-            pathlib.Path(h).read_text())))
+    for h in history_files(args.history, args.history_window):
+        n_before = len(fit_rows)
+        fit_rows.extend(collect_rows(json.loads(h.read_text())))
+        print(f"history: {h} (+{len(fit_rows) - n_before} rows)")
 
     consts = fit(fit_rows)
     cur = ratios(rows, consts)

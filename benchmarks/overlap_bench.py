@@ -67,7 +67,8 @@ from repro import configs, optim
 from repro.core import lowering
 from repro.core import schedule as schedule_ir
 from repro.core import simulate, tac
-from repro.core.collectives import CollectiveHandle, ProgressEngine, _Machine
+from repro.core.collectives import (Collectives, CollectiveHandle,
+                                    ProgressEngine, _Machine)
 from repro.core.continuations import ContinuationEngine
 from repro.core.overlap import _make_buckets
 from repro.models import inputs
@@ -216,6 +217,104 @@ def bench_hierarchical(reps: int, elems: int) -> dict:
                                               gamma=GAMMA)
             entry["features"] = features(sched, nbytes)
         report[name] = entry
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Level-A executor microbench: compiled vs interpreted schedule programs
+# ---------------------------------------------------------------------------
+LEVEL_A_RANKS = 8
+LEVEL_A_ALGORITHMS = ("ring", "doubling")
+LEVEL_A_ELEMS = (64, 1 << 14)       # float64 payloads: 512 B and 128 KiB
+# raw small-payload regression guard: compiled may never be SLOWER than
+# the interpreter it replaces (the calibrated ≤0.5× overhead bar lives
+# in tools/calibrate.py, where shared per-transfer cost is factored
+# out — raw wall time is transport-dominated, so the raw ratio only
+# needs to catch a fast path that stopped being fast).
+LEVEL_A_MAX_SMALL_RATIO = 0.98
+
+
+def serial_features(sched: schedule_ir.Schedule, size: float) -> dict:
+    """Linear cost features of one schedule under a SERIAL driver.
+
+    ``Collectives.run_group`` drives every rank's program round-robin on
+    one thread, so wall time tracks the schedule's TOTAL work — transfers
+    executed, bytes moved, bytes combined, summed over all ranks — not
+    the one-port critical path :func:`features` reads off the DAG for the
+    overlapped XLA legs.  α then fits the per-transfer host transport
+    cost (shared by both executors on the same wire) and each executor
+    class's ``overhead`` intercept absorbs its per-call fixed cost.
+    """
+    rounds = wire = combine = 0.0
+    for prog in sched.programs:
+        for op in prog:
+            if isinstance(op, schedule_ir.Send):
+                rounds += 1.0
+                wire += op.frac * size
+            elif isinstance(op, schedule_ir.Combine):
+                combine += op.frac * size
+    return {"rounds": rounds, "wire_bytes": wire, "combine_bytes": combine}
+
+
+def bench_level_a(smoke: bool = False) -> dict:
+    """The executor leg: compiled per-rank programs vs the interpreter.
+
+    The SAME host collectives (8-rank allreduce over a ``CommWorld``,
+    both wire-compatible executors) timed under the serial group driver
+    at two payload sizes × two algorithms, rows tagged with
+    ``overhead_class`` so ``tools/calibrate.py`` fits a separate
+    per-call overhead constant per executor (α/β/γ shared).  HARD
+    ASSERTS the raw small-payload win — a compiled-path regression fails
+    the bench-smoke job before the calibrated gate even runs.
+    """
+    import numpy as np
+    n = LEVEL_A_RANKS
+    reps = 10 if smoke else 30
+    report: dict = {"ranks": n, "reps": reps,
+                    "compiled": {}, "interpreted": {}}
+    small = {"compiled": 0.0, "interpreted": 0.0}
+
+    def runner(executor, algorithm, elems):
+        world = tac.CommWorld(n)
+        coll = Collectives(world, executor=executor)
+        kw = [{"value": np.arange(elems, dtype=np.float64) + r}
+              for r in range(n)]
+        return lambda _: coll.run_group("allreduce", kw,
+                                        algorithm=algorithm)
+
+    # Executors INTERLEAVED per configuration (and one untimed warm pass
+    # first): allocator/code warmup and neighbor noise hit both classes
+    # alike, so the compiled/interpreted ratio stays honest even when
+    # absolute times wander.
+    for algorithm in LEVEL_A_ALGORITHMS:
+        for elems in LEVEL_A_ELEMS:
+            for executor in ("compiled", "interpreted"):
+                runner(executor, algorithm, elems)(None)
+    for algorithm in LEVEL_A_ALGORITHMS:
+        for elems in LEVEL_A_ELEMS:
+            sched = schedule_ir.build("allreduce", algorithm, n)
+            nbytes = elems * 8
+            for executor in ("compiled", "interpreted"):
+                # _time_call's warmup call also compiles + caches the
+                # per-rank programs: steady-state timing for both.
+                dt = _time_call(runner(executor, algorithm, elems),
+                                None, reps)
+                report[executor][f"{algorithm}_{elems}"] = {
+                    "algorithm": algorithm, "payload_bytes": nbytes,
+                    "measured_s": dt,
+                    "features": serial_features(sched, nbytes),
+                    "overhead_class": f"level_a:{executor}",
+                }
+                if elems == LEVEL_A_ELEMS[0]:
+                    small[executor] += dt
+    ratio = small["compiled"] / small["interpreted"]
+    report["small_payload_ratio"] = ratio
+    if ratio > LEVEL_A_MAX_SMALL_RATIO:
+        raise SystemExit(
+            f"compiled executor lost its small-payload win: "
+            f"compiled/interpreted = {ratio:.2f} "
+            f"(max {LEVEL_A_MAX_SMALL_RATIO}); the per-call fast path "
+            f"regressed")
     return report
 
 
@@ -401,6 +500,18 @@ def bench(print_fn=print, smoke: bool = False,
         rows.append((f"allreduce_{name}", e["measured_s"] * 1e6,
                      f"ppermutes={e['collective_permutes']};"
                      f"all_reduces={e['all_reduces']}"))
+
+    # compiled vs interpreted schedule executors (Level-A host path):
+    # per-executor overhead_class rows for the per-class calibration fit
+    # (small-payload win hard-asserted)
+    level_a = bench_level_a(smoke)
+    report["level_a"] = level_a
+    for executor in ("compiled", "interpreted"):
+        for name, e in level_a[executor].items():
+            rows.append((f"level_a_{executor}_{name}",
+                         e["measured_s"] * 1e6,
+                         f"payload_bytes={e['payload_bytes']};"
+                         f"class={e['overhead_class']}"))
 
     # polling vs continuation notification: progress cost over an
     # in-flight sweep (flat vs linear per completion; hard-asserted)

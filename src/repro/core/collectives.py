@@ -81,7 +81,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from . import tac
+from . import program as program_ir
 from . import schedule as schedule_ir
+from .program import bind_inputs as _bind_inputs
 from .schedule import (Combine, Const, Copy, Pack, Recv, Schedule, Send,
                        Slice, Unpack)
 from .events import (current_task, get_current_event_counter,
@@ -90,10 +92,23 @@ from .events import (current_task, get_current_event_counter,
 
 __all__ = ["Collectives", "CollectiveHandle", "ProgressEngine", "n_rounds",
            "HaloExchange", "HierarchicalCollectives",
-           "PersistentCollective", "ALGORITHMS", "MODES"]
+           "PersistentCollective", "ALGORITHMS", "MODES", "EXECUTORS"]
 
 ALGORITHMS = ("ring", "doubling")
 MODES = ("blocking", "event")
+# Level-A executors: "compiled" caches each (schedule, communicator, op,
+# tag-family) as a flat pre-bound program (repro.core.program) — the
+# steady-state default; "interpreted" re-walks the IR per call
+# (_interpret) — the reference executor.  Wire protocol (tags, posting
+# order) is identical, so mixed-executor ranks interoperate.
+EXECUTORS = ("compiled", "interpreted")
+
+
+def _norm_executor(executor: str) -> str:
+    if executor not in EXECUTORS:
+        raise ValueError(f"unknown executor {executor!r}; "
+                         f"one of {EXECUTORS}")
+    return executor
 
 _OPS: Dict[str, Callable] = {"sum": np.add, "prod": np.multiply,
                              "max": np.maximum, "min": np.minimum}
@@ -437,38 +452,6 @@ def _drive_group(machines: Sequence[_Machine]) -> None:
 # Posts isends, yields irecv handle(s), receives the payload(s) via
 # send(); StopIteration.value is the rank's result.
 # ---------------------------------------------------------------------------
-def _bind_inputs(sched: Schedule, value, blocks, sends):
-    """Initial buffer environment for one rank; returns (env, shape)."""
-    env: Dict[Any, Any] = {}
-    shape = None
-    kind = sched.input_kind
-    if kind == "value":
-        env["in"] = value
-    elif kind == "array":
-        env["in"] = np.asarray(value)
-    elif kind == "chunks":
-        arr = np.asarray(value)
-        shape = arr.shape
-        outer = np.array_split(arr.reshape(-1), sched.n_chunks or sched.n)
-        if sched.segments == 1:
-            for i, c in enumerate(outer):
-                env[("c", i)] = c
-        else:
-            for i, c in enumerate(outer):
-                segs = np.array_split(c, sched.segments)
-                for s, seg in enumerate(segs):
-                    env[("c", i, s)] = seg
-    elif kind == "blocks":
-        for d in range(sched.n):
-            env[("b", d)] = blocks[d]
-    elif kind == "dirs":
-        for d, v in sends.items():
-            env[("s", d)] = v
-    elif kind != "none":            # pragma: no cover - new input kinds
-        raise ValueError(f"unknown input kind {kind!r}")
-    return env, shape
-
-
 def _interpret(sched: Schedule, comm, rank: int, tag, *, value=None,
                op=None, blocks=None, sends=None):
     """Execute rank ``rank``'s program of ``sched`` over ``comm``.
@@ -598,7 +581,9 @@ class Collectives:
     """
 
     def __init__(self, comm, *, alpha: float = 1e-6, beta: float = 1e-9,
-                 gamma: float = 0.0, calibration: Any = None) -> None:
+                 gamma: float = 0.0, calibration: Any = None,
+                 executor: str = "compiled") -> None:
+        self.executor = _norm_executor(executor)
         self.comm = comm
         self.world = comm   # historical alias (pre-sub-communicator name)
         self.alpha = alpha
@@ -617,9 +602,17 @@ class Collectives:
         self._seq = [itertools.count() for _ in range(comm.size)]
 
     # -- plumbing ----------------------------------------------------------
+    def _key(self, rank: int, key: Any) -> Any:
+        """The call's tag epoch: explicit, or the next per-rank sequence
+        number (MPI's same-order-on-every-rank rule).  Consumed only
+        AFTER validation/resolution succeeded — both executors draw from
+        the same counters, so a rejected call can never desynchronize a
+        rank's subsequent keyless collectives from its peers."""
+        return next(self._seq[rank]) if key is None else key
+
     def _tagger(self, name: str, rank: int, key: Any):
-        if key is None:
-            key = next(self._seq[rank])
+        key = self._key(rank, key)
+
         def tag(sub: Any):
             return ("coll", name, key, sub)
         return tag
@@ -675,8 +668,15 @@ class Collectives:
             raise ValueError(f"rank {rank} out of range for size {n}")
         sched = self._resolve(name, algorithm, segments, root, value,
                               hierarchical=hierarchical)
-        return _interpret(sched, self.comm, rank,
-                          self._tagger(name, rank, key),
+        key = self._key(rank, key)
+        if self.executor == "compiled":
+            prog = program_ir.compile_schedule(sched, self.comm, op=op,
+                                               head=("coll", name))
+            return prog.gen(rank, key, value=value, blocks=blocks)
+
+        def tag(sub: Any):
+            return ("coll", name, key, sub)
+        return _interpret(sched, self.comm, rank, tag,
                           value=value, op=op, blocks=blocks)
 
     def _run(self, name: str, algorithm: Optional[str], rank: int,
@@ -781,9 +781,14 @@ class Collectives:
         mode = _norm_mode(mode)
         sched = _neighbor_schedule(self.comm)
         sends = _check_dir_payloads(sends, sched.out_dirs[rank])
-        gen = _interpret(sched, self.comm, rank,
-                         self._tagger("neighbor_alltoall", rank, key),
-                         sends=sends)
+        if self.executor == "compiled":
+            prog = program_ir.compile_schedule(
+                sched, self.comm, head=("coll", "neighbor_alltoall"))
+            gen = prog.gen(rank, self._key(rank, key), sends=sends)
+        else:
+            gen = _interpret(sched, self.comm, rank,
+                             self._tagger("neighbor_alltoall", rank, key),
+                             sends=sends)
         return _execute_schedule(gen, mode)
 
     # -- persistent collectives (MPI_*_init analogue) ----------------------
@@ -911,6 +916,13 @@ class PersistentCollective:
         self.op = _op_fn(op) if name in _REDUCING else None
         self._id = next(_PERSISTENT_IDS)
         self._seq = [itertools.count() for _ in range(coll.comm.size)]
+        # The persistent plan (MPI_*_init analogue): under the owner's
+        # compiled executor the pre-bound program is resolved once here
+        # and re-posted by every start()/run_group() with a fresh tag
+        # epoch; the cache makes same-schedule instances share it.
+        self._prog = (program_ir.compile_schedule(
+            self.sched, coll.comm, op=self.op, head=("pers", self._id))
+            if coll.executor == "compiled" else None)
 
     def _tagger(self, rank: int, key: Any):
         if key is None:
@@ -926,6 +938,10 @@ class PersistentCollective:
                              f"{self.sched.n}")
         if self.sched.input_kind == "blocks" and blocks is None:
             blocks = list(value) if value is not None else None
+        if self._prog is not None:
+            if key is None:
+                key = next(self._seq[rank])
+            return self._prog.gen(rank, key, value=value, blocks=blocks)
         return _interpret(self.sched, self.coll.comm, rank,
                           self._tagger(rank, key), value=value,
                           op=self.op, blocks=blocks)
@@ -1027,12 +1043,18 @@ class HaloExchange:
     ``key=iteration``).
     """
 
-    def __init__(self, cart) -> None:
+    def __init__(self, cart, *, executor: str = "compiled") -> None:
+        self.executor = _norm_executor(executor)
         self.cart = cart
         self.sched = _neighbor_schedule(cart)
         self.dirs = {r: _topology_dirs(cart, r) for r in range(cart.size)}
         self._seq = [itertools.count() for _ in range(cart.size)]
         self._id = next(_HALO_IDS)
+        # The persistent neighbourhood plan: edge peers pre-translated,
+        # per-direction tags pre-built; every iteration re-posts it.
+        self._prog = (program_ir.compile_schedule(
+            self.sched, cart, head=("halo", self._id))
+            if self.executor == "compiled" else None)
 
     def neighbors(self, rank: int):
         """The persistent neighbour list ``[((dim, ±1), neighbour)]``."""
@@ -1048,6 +1070,10 @@ class HaloExchange:
 
     def _gen(self, rank: int, key: Any, sends):
         sends = _check_dir_payloads(sends, self.sched.out_dirs[rank])
+        if self._prog is not None:
+            if key is None:
+                key = next(self._seq[rank])
+            return self._prog.gen(rank, key, sends=sends)
         return _interpret(self.sched, self.cart, rank,
                           self._tagger(rank, key), sends=sends)
 
@@ -1100,7 +1126,9 @@ class HierarchicalCollectives:
     contract as :class:`Collectives`.
     """
 
-    def __init__(self, world: tac.CommWorld, group_size: int) -> None:
+    def __init__(self, world: tac.CommWorld, group_size: int, *,
+                 executor: str = "compiled") -> None:
+        self.executor = _norm_executor(executor)
         if group_size <= 0:
             raise ValueError(f"group_size must be positive, got "
                              f"{group_size}")
@@ -1131,13 +1159,39 @@ class HierarchicalCollectives:
         if key is None:
             key = next(self._seq[rank])
 
-        def tag(stage):
-            return lambda sub: ("hier", key, stage, sub)
-
+        # Stage tags are ("hier", stage, key, sub) — the uniform
+        # family-head + (epoch, transfer) shape every collective uses, so
+        # the compiled executor's pre-built templates (head=("hier",
+        # stage)) and the interpreter produce identical wire tags.
         reduce_s = schedule_ir.build("reduce", "ring", intra.size)
         leaders_s = schedule_ir.build("allreduce", "doubling",
                                       self.leaders.size)
         bcast_s = schedule_ir.build("bcast", "ring", intra.size)
+
+        if self.executor == "compiled":
+            # Per-color intra groups are shared objects, so every member
+            # of a pod (and every iteration) hits the same cached plans.
+            stage = [
+                program_ir.compile_schedule(reduce_s, intra, op=op,
+                                            head=("hier", "reduce")),
+                program_ir.compile_schedule(leaders_s, self.leaders, op=op,
+                                            head=("hier", "leaders")),
+                program_ir.compile_schedule(bcast_s, intra,
+                                            head=("hier", "bcast")),
+            ]
+
+            def gen():
+                acc = yield from stage[0].gen(lr, key,
+                                              value=np.asarray(value))
+                if lr == 0:
+                    li = intra.translate(0, self.leaders)
+                    acc = yield from stage[1].gen(li, key, value=acc)
+                result = yield from stage[2].gen(lr, key, value=acc)
+                return result
+            return gen()
+
+        def tag(stage):
+            return lambda sub: ("hier", stage, key, sub)
 
         def gen():
             acc = yield from _interpret(reduce_s, intra, lr,
@@ -1164,6 +1218,11 @@ class HierarchicalCollectives:
                 f"{self.group_size} != 0)")
         if key is None:
             key = next(self._seq[rank])
+        if self.executor == "compiled":
+            prog = program_ir.compile_schedule(self.sched, self.world,
+                                               op=op,
+                                               head=("hier-composed",))
+            return prog.gen(rank, key, value=np.asarray(value))
 
         def tag(sub):
             return ("hier-composed", key, sub)

@@ -79,9 +79,12 @@ class TaskRuntime:
         if block_mode not in ("spare-thread", "nested"):
             raise ValueError(f"unknown block_mode {block_mode!r}")
         if notify is None:
-            # env override lets the whole tier-1 suite run under either
-            # backend unchanged (CI exercises REPRO_NOTIFY=continuation).
-            notify = os.environ.get("REPRO_NOTIFY") or "polling"
+            # Continuation notification is the default (O(completions)
+            # dispatches; ROADMAP carry-over after the CI soak); the env
+            # override lets the whole tier-1 suite run under either
+            # backend unchanged (CI exercises REPRO_NOTIFY=polling to
+            # keep the legacy backend covered).
+            notify = os.environ.get("REPRO_NOTIFY") or "continuation"
         if notify not in NOTIFY_BACKENDS:
             raise ValueError(f"unknown notify backend {notify!r}; "
                              f"one of {NOTIFY_BACKENDS}")

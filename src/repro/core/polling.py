@@ -55,19 +55,30 @@ class PollingRegistry:
     def unregister_polling_service(self, service_name: str,
                                    service_function: PollingService,
                                    service_data: Any = None) -> None:
-        """Disable a callback; returns once it is no longer being invoked."""
+        """Disable a callback; returns once it is no longer being invoked.
+
+        Removes exactly ONE registration (the oldest still active), so
+        register×2 + unregister×1 leaves one live service — matching the
+        register/unregister pairing of the paper's API.  The matching
+        ``_Service`` is captured under the same registry-lock hold that
+        marks it ``done``: a concurrent ``poll_once`` may ``_gc()`` the
+        marked service off the list at any point afterwards, so a second
+        list snapshot could miss it and return while its callback is
+        still running.
+        """
+        target = None
         with self._lock:
             for s in self._services:
-                if s.matches(service_name, service_function, service_data):
+                if not s.done and s.matches(service_name, service_function,
+                                            service_data):
                     s.done = True
-        # Returning "once the callback has been disabled" (§4.2): grab each
-        # matching service's lock to ensure no in-flight invocation remains.
-        with self._lock:
-            matches = [s for s in self._services
-                       if s.matches(service_name, service_function,
-                                    service_data)]
-        for s in matches:
-            with s.lock:
+                    target = s
+                    break
+        if target is not None:
+            # Returning "once the callback has been disabled" (§4.2):
+            # grab the captured service's lock so no in-flight invocation
+            # remains — the reference outlives any concurrent _gc().
+            with target.lock:
                 pass
         self._gc()
 

@@ -350,6 +350,32 @@ class Schedule:
             return [("rv", d) for d in self.out_dirs[rank]]
         return []
 
+    def wait_plan(self, rank: int) -> Tuple[
+            Tuple[Tuple[Op, Tuple[Any, ...]], ...], Tuple[Any, ...]]:
+        """Static wait plan of one rank's program.
+
+        Whether an op must wait on an in-flight receive is a property of
+        the *schedule*, not of any particular run: a buffer is pending
+        exactly when an earlier ``Recv`` posted it and no op between the
+        two reads it.  Returns ``(steps, tail)``: ``steps`` pairs every op
+        with the (possibly empty) tuple of pending buffers it consumes, in
+        posting order; ``tail`` is the receives still in flight after the
+        last op — completion waits on them (barrier semantics).  Executors
+        that precompute this (:mod:`repro.core.program`) wait exactly
+        where the reference interpreter
+        (:func:`repro.core.collectives._interpret`) would.
+        """
+        posted: Dict[Any, None] = {}    # insertion-ordered set
+        steps: List[Tuple[Op, Tuple[Any, ...]]] = []
+        for op in self.programs[rank]:
+            waits = tuple(b for b in op.reads if b in posted)
+            for b in waits:
+                del posted[b]
+            steps.append((op, waits))
+            if isinstance(op, Recv):
+                posted[op.buf] = None
+        return tuple(steps), tuple(posted)
+
     # -- cost model ---------------------------------------------------------
     def cost(self, alpha: float, beta: float, size: float = 0.0, *,
              gamma: float = 0.0) -> float:

@@ -132,12 +132,22 @@ class EventHandle(PushCompletion, AsyncHandle):
         self._result: Any = None
 
     def complete(self, result: Any = None) -> None:
-        def assign() -> None:
+        # Open-coded _complete_once(assign): this runs 2-3 times per
+        # transfer (O(n²) per allreduce) and the closure-pair allocation
+        # is measurable there.  Semantics are identical.
+        with self._cb_lock:
+            if self._done:
+                return
             self._result = result
-        self._complete_once(assign)
+            self._done = True
+            if self._waiter is not None:
+                self._waiter.set()
+            cbs, self._cbs = self._cbs, []
+        for cb in cbs:
+            cb(self)
 
     def wait(self) -> Any:
-        self._event.wait()
+        self._wait_event().wait()
         return self._result
 
 
@@ -202,7 +212,11 @@ class _SendHandle(EventHandle):
         if not synchronous:
             # Buffered send: locally complete immediately (MPI_Isend on a
             # small message); synchronous send completes on match (MPI_Issend).
-            self.complete(payload)
+            # No other thread can hold a reference during __init__, so the
+            # completion publishes lock-free (complete() stays idempotent:
+            # the match-time re-complete sees _done and returns).
+            self._result = payload
+            self._done = True
 
 
 class _RecvHandle(EventHandle):
@@ -250,7 +264,8 @@ class CommWorld:
             # Complete OUTSIDE the world lock: completion may push a
             # continuation whose dispatch posts messages (needs the lock).
             matched.complete(payload)
-            h.complete(payload)
+            if not h._done:                 # buffered sends already are
+                h.complete(payload)
         return h
 
     def irecv(self, *, src: int, dst: int, tag: Any = 0) -> _RecvHandle:
@@ -264,7 +279,8 @@ class CommWorld:
             else:
                 self._recvs.setdefault(key, []).append(r)
         if matched is not None:
-            matched.complete(matched.payload)   # outside the lock (see isend)
+            if not matched._done:           # synchronous send: confirm match
+                matched.complete(matched.payload)   # outside the lock
             r.complete(matched.payload)
         return r
 

@@ -181,3 +181,76 @@ def test_polling_service_periodic_and_unregister():
     reg2.register_polling_service("once", lambda d: True, None)
     reg2.poll_once()
     assert reg2.num_services == 0
+
+
+def test_unregister_waits_for_inflight_callback_despite_concurrent_gc():
+    """Unregister must not return while the callback is still executing,
+    even when a concurrent poller _gc()s the done-marked service off the
+    registry list (the reference must be captured in the SAME locked pass
+    that marks it done — a second list snapshot can miss it)."""
+    from repro.core import PollingRegistry
+    reg = PollingRegistry()
+    entered = threading.Event()
+    release = threading.Event()
+    state = {"running": False}
+
+    def slow_cb(_data):
+        state["running"] = True
+        entered.set()
+        release.wait(5)
+        state["running"] = False
+        return False
+
+    reg.register_polling_service("slow", slow_cb)
+    poller = threading.Thread(target=reg.poll_once)
+    poller.start()
+    assert entered.wait(5)
+
+    unreg_done = threading.Event()
+
+    def unreg():
+        reg.unregister_polling_service("slow", slow_cb)
+        unreg_done.set()
+
+    u = threading.Thread(target=unreg)
+    u.start()
+    # The concurrent poll_once tail: hammer _gc() while unregister runs —
+    # the service vanishes from the list, but unregister already holds
+    # its reference and must stay blocked on the callback's lock.
+    for _ in range(50):
+        reg._gc()
+        time.sleep(0.001)
+    assert state["running"]
+    assert not unreg_done.is_set()
+    release.set()
+    u.join(5)
+    poller.join(5)
+    assert unreg_done.is_set()
+    assert not state["running"]     # returned only after the callback left
+    assert reg.num_services == 0
+
+
+def test_unregister_removes_exactly_one_duplicate():
+    """register x2 + unregister x1 leaves ONE live registration (the old
+    code marked every (name, fn, data) match done at once)."""
+    from repro.core import PollingRegistry
+    reg = PollingRegistry()
+    calls = []
+
+    def cb(data):
+        calls.append(data)
+        return False
+
+    reg.register_polling_service("dup", cb, 7)
+    reg.register_polling_service("dup", cb, 7)
+    assert reg.num_services == 2
+
+    reg.unregister_polling_service("dup", cb, 7)
+    assert reg.num_services == 1
+    reg.poll_once()
+    assert calls == [7]             # the survivor still fires
+
+    reg.unregister_polling_service("dup", cb, 7)
+    assert reg.num_services == 0
+    reg.poll_once()
+    assert calls == [7]

@@ -547,6 +547,101 @@ def test_calibrate_fit_recovers_constants(tmp_path):
     assert "MISSING" in run.stdout
 
 
+def test_calibrate_per_executor_overheads_and_gate(tmp_path):
+    """Rows labelled ``overhead_class`` fit per-family α/β/γ plus a
+    per-class overhead intercept; the gate hard-asserts the compiled
+    executor's intercept at ≤ 0.5× the interpreted one — and catches a
+    compiled-path regression even when no per-row ratio drifts."""
+    import json
+    import pathlib
+    import subprocess
+    import sys
+    # the default (XLA-leg) family, fitted exactly as before
+    true = {"alpha": 2e-6, "beta": 4e-9, "gamma": 1e-10, "overhead": 3e-3}
+    report = {"modes": {}, "level_a": {"compiled": {}, "interpreted": {}}}
+    for i, (name, size) in enumerate(
+            [("fused", 1 << 20), ("bucketed", 1 << 16),
+             ("sentinel", 1 << 18), ("tiny", 1 << 8)]):
+        sched = build("allreduce", "ring" if i % 2 else "doubling", 8)
+        feats = {"rounds": sched.cost(1.0, 0.0, 0.0),
+                 "wire_bytes": sched.cost(0.0, 1.0, size),
+                 "combine_bytes": sched.cost(0.0, 0.0, size, gamma=1.0)}
+        report["modes"][name] = {
+            "features": feats,
+            "measured_s": (true["alpha"] * feats["rounds"]
+                           + true["beta"] * feats["wire_bytes"]
+                           + true["gamma"] * feats["combine_bytes"]
+                           + true["overhead"])}
+    # the level_a family: its OWN transport constants (host isend/irecv,
+    # orders of magnitude off the XLA legs') + per-executor overheads
+    fam = {"alpha": 1.2e-5, "beta": 2e-10, "gamma": 5e-11}
+    configs = [("ring_small", 112, 7168, 3584),
+               ("ring_big", 112, 1835008, 917504),
+               ("dbl_small", 24, 12288, 12288),
+               ("dbl_big", 24, 3145728, 3145728)]
+
+    def level_a_rows(overheads):
+        rows = {"compiled": {}, "interpreted": {}}
+        for executor, o in overheads.items():
+            for name, r, w, v in configs:
+                rows[executor][name] = {
+                    "features": {"rounds": r, "wire_bytes": w,
+                                 "combine_bytes": v},
+                    "measured_s": (fam["alpha"] * r + fam["beta"] * w
+                                   + fam["gamma"] * v + o),
+                    "overhead_class": f"level_a:{executor}"}
+        return rows
+
+    report["level_a"] = level_a_rows({"compiled": 4e-5,
+                                      "interpreted": 2e-4})
+    bench = tmp_path / "BENCH_overlap.json"
+    bench.write_text(json.dumps(report))
+    tool = pathlib.Path(__file__).resolve().parents[1] / "tools" / \
+        "calibrate.py"
+    base = tmp_path / "BENCH_baseline.json"
+    out = tmp_path / "CALIBRATION.json"
+    run = subprocess.run(
+        [sys.executable, str(tool), "--bench", str(bench), "--out",
+         str(out), "--write-baseline", str(base)],
+        capture_output=True, text=True)
+    assert run.returncode == 0, run.stderr
+    consts = json.loads(out.read_text())
+    # top-level constants: the default family's, as before labels existed
+    assert consts["alpha"] == pytest.approx(true["alpha"], rel=1e-3)
+    assert consts["overhead"] == pytest.approx(true["overhead"], rel=1e-3)
+    # the level_a family fits its own transport constants...
+    la = consts["families"]["level_a"]
+    assert la["alpha"] == pytest.approx(fam["alpha"], rel=1e-3)
+    assert la["beta"] == pytest.approx(fam["beta"], rel=1e-3)
+    # ...and one overhead intercept per executor class
+    assert consts["overheads"]["level_a:compiled"] == pytest.approx(
+        4e-5, rel=1e-3)
+    assert consts["overheads"]["level_a:interpreted"] == pytest.approx(
+        2e-4, rel=1e-3)
+    # exact synthetic data: every per-row ratio is 1
+    cal = json.loads(out.read_text())
+    assert all(abs(r["ratio"] - 1.0) < 1e-6 for r in cal["rows"].values())
+    run = subprocess.run(
+        [sys.executable, str(tool), "--bench", str(bench), "--gate",
+         "--baseline", str(base), "--out", str(out)],
+        capture_output=True, text=True)
+    assert run.returncode == 0, run.stdout + run.stderr
+    assert "executor overhead" in run.stdout
+    # compiled overhead regresses to 0.75× interpreted: the per-row
+    # ratios barely move (well inside ×tolerance) but the executor
+    # assertion fails the gate
+    report["level_a"] = level_a_rows({"compiled": 1.5e-4,
+                                      "interpreted": 2e-4})
+    bench.write_text(json.dumps(report))
+    run = subprocess.run(
+        [sys.executable, str(tool), "--bench", str(bench), "--gate",
+         "--baseline", str(base), "--out", str(out)],
+        capture_output=True, text=True)
+    assert run.returncode == 1
+    assert "compiled executor per-call overhead" in run.stderr
+    assert "DRIFT" not in run.stdout
+
+
 def test_calibrate_history_directory_rolling_window(tmp_path):
     """--history accepts a directory of per-run artifacts; the rolling
     window keeps only the newest N (timestamped names sort

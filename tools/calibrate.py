@@ -9,8 +9,22 @@ least-squares fits the machine model
     measured ≈ α·R + β·W + γ·V + overhead
 
 over every row of the bench report (plus ``--history`` files when
-present), with all four constants constrained non-negative (active-set
-NNLS over ``numpy.linalg.lstsq``).  The fitted constants are the
+present), with all constants constrained non-negative (active-set
+NNLS over ``numpy.linalg.lstsq``).  A row may carry an
+``overhead_class`` label (the Level-A executor leg tags its rows
+``level_a:compiled`` / ``level_a:interpreted``); each class gets its OWN
+fitted per-call ``overhead`` intercept, and classes sharing a *family*
+(the label up to the ``:``) share one α/β/γ — ``level_a:*`` rows fit the
+host transport's per-transfer/per-byte constants, common to both
+executors on the same wire, separately from the unlabelled ``default``
+family's XLA-leg constants (one α across both families would be
+physically meaningless: host isend/irecv latency and device collective
+rounds differ by orders of magnitude, and the executor intercepts would
+just absorb the mismatch).  The per-class intercept is then exactly the
+per-call executor overhead — the quantity the compiled-program work
+exists to kill.  Unlabelled rows form the ``default`` class/family,
+whose constants are also reported at top level for back-compatibility.
+The fitted constants are the
 CALIBRATED α-β(-γ) model: ``repro.core.schedule.load_calibration`` feeds
 them to ``best_schedule`` / ``Collectives(comm, calibration=...)`` so
 ``algorithm="auto"`` selects under measured rather than nominal
@@ -24,7 +38,11 @@ predictions can be compared like with like.
 machine, uniform speed differences cancel — a ratio drifting beyond
 ``--tolerance`` (×) of its baseline value means a *structural* change:
 a schedule serialising that used to overlap, a collective count
-regression, a cost-model break.
+regression, a cost-model break.  When BOTH executor classes are in the
+fit, the gate additionally hard-asserts the compiled executor's fitted
+per-call overhead at ≤ ``EXECUTOR_OVERHEAD_MAX_RATIO`` × the
+interpreted one — the acceptance bar for the compiled-program executor,
+enforced every bench-smoke run rather than once at review time.
 
 **History** (rolling-window fits): ``--history`` accepts bench report
 FILES and/or DIRECTORIES of per-run artifacts (the bench-smoke CI job
@@ -56,7 +74,22 @@ import numpy as np
 
 FEATURE_KEYS = ("rounds", "wire_bytes", "combine_bytes")
 CONSTANT_KEYS = ("alpha", "beta", "gamma", "overhead")
+DEFAULT_CLASS = "default"
+# compiled per-call overhead must stay at or below this fraction of the
+# interpreted executor's (the Level-A executor acceptance bar).
+EXECUTOR_OVERHEAD_MAX_RATIO = 0.5
+_EXECUTOR_CLASSES = ("level_a:compiled", "level_a:interpreted")
 _EPS = 1e-12
+
+
+def row_class(row: dict) -> str:
+    return row.get("overhead_class", DEFAULT_CLASS)
+
+
+def class_family(cls: str) -> str:
+    """Classes share machine constants per family: ``level_a:compiled``
+    and ``level_a:interpreted`` fit one ``level_a`` α/β/γ between them."""
+    return cls.split(":", 1)[0]
 
 
 def collect_rows(report: dict, prefix: str = "") -> List[Tuple[str, dict]]:
@@ -119,19 +152,53 @@ def nnls(A: np.ndarray, b: np.ndarray) -> np.ndarray:
 
 
 def fit(rows: List[Tuple[str, dict]]) -> Dict[str, float]:
-    A = np.array([[r["features"][k] for k in FEATURE_KEYS] + [1.0]
-                  for _, r in rows], dtype=float)
+    """NNLS fit: α/β/γ per class *family*, overhead intercept per class.
+
+    One joint non-negative least squares over a block design — each
+    family's rows load only that family's feature columns, each class
+    its own intercept column — so an all-``default`` report reproduces
+    the original 4-constant fit bit-for-bit.  Returns ``{"alpha",
+    "beta", "gamma", "overhead"}`` (the ``default`` family/class, the
+    shape older consumers read) plus ``"families"`` (per-family α/β/γ)
+    and ``"overheads"`` (per-class intercepts).
+    """
+    classes = sorted({row_class(r) for _, r in rows})
+    families = sorted({class_family(c) for c in classes})
+    A = np.array(
+        [[r["features"][k] if class_family(row_class(r)) == fam else 0.0
+          for fam in families for k in FEATURE_KEYS]
+         + [1.0 if row_class(r) == c else 0.0 for c in classes]
+         for _, r in rows], dtype=float)
     b = np.array([r["measured_s"] for _, r in rows], dtype=float)
     x = nnls(A, b)
-    return dict(zip(CONSTANT_KEYS, (float(v) for v in x)))
+    nf = len(FEATURE_KEYS)
+    fam_consts = {
+        fam: dict(zip(CONSTANT_KEYS[:nf],
+                      (float(v) for v in x[i * nf:(i + 1) * nf])))
+        for i, fam in enumerate(families)}
+    consts = dict(fam_consts.get(DEFAULT_CLASS,
+                                 dict.fromkeys(CONSTANT_KEYS[:nf], 0.0)))
+    consts["families"] = fam_consts
+    consts["overheads"] = {
+        c: float(v) for c, v in zip(classes, x[len(families) * nf:])}
+    consts["overhead"] = consts["overheads"].get(DEFAULT_CLASS, 0.0)
+    return consts
 
 
 def predict_calibrated(row: dict, consts: Dict[str, float]) -> float:
     f = row["features"]
-    return (consts["alpha"] * f["rounds"]
-            + consts["beta"] * f["wire_bytes"]
-            + consts["gamma"] * f["combine_bytes"]
-            + consts["overhead"])
+    cls = row_class(row)
+    # Per-family constants / per-class overhead when the fit carried
+    # them; old single-constant calibration files fall back to the
+    # legacy flat keys.
+    fam = consts.get("families", {}).get(
+        class_family(cls),
+        {k: consts[k] for k in CONSTANT_KEYS[:3]})
+    overhead = consts.get("overheads", {}).get(cls, consts["overhead"])
+    return (fam["alpha"] * f["rounds"]
+            + fam["beta"] * f["wire_bytes"]
+            + fam["gamma"] * f["combine_bytes"]
+            + overhead)
 
 
 def ratios(rows: List[Tuple[str, dict]],
@@ -170,6 +237,28 @@ def gate(cur: Dict[str, float], base: Dict[str, float],
             f"stopped emitting measured_s/features; refresh the baseline "
             f"deliberately if it was removed on purpose")
     return failures
+
+
+def executor_overhead_failures(consts: Dict[str, float]) -> List[str]:
+    """The Level-A acceptance check: compiled per-call overhead must fit
+    at ≤ ``EXECUTOR_OVERHEAD_MAX_RATIO`` × the interpreted executor's.
+    Empty (pass) when either executor class is absent from the fit."""
+    overheads = consts.get("overheads", {})
+    compiled_cls, interp_cls = _EXECUTOR_CLASSES
+    if compiled_cls not in overheads or interp_cls not in overheads:
+        return []
+    compiled, interp = overheads[compiled_cls], overheads[interp_cls]
+    ratio = compiled / max(interp, _EPS)
+    ok = compiled <= EXECUTOR_OVERHEAD_MAX_RATIO * interp + _EPS
+    print(f"  executor overhead: compiled {compiled*1e3:.3f} ms vs "
+          f"interpreted {interp*1e3:.3f} ms (×{ratio:.2f}, max "
+          f"×{EXECUTOR_OVERHEAD_MAX_RATIO}) {'ok' if ok else 'FAIL'}")
+    if ok:
+        return []
+    return [f"compiled executor per-call overhead {compiled*1e3:.3f} ms "
+            f"exceeds {EXECUTOR_OVERHEAD_MAX_RATIO} x interpreted "
+            f"({interp*1e3:.3f} ms): the compiled-program fast path "
+            f"regressed"]
 
 
 def main(argv=None) -> int:
@@ -213,6 +302,15 @@ def main(argv=None) -> int:
     cur = ratios(rows, consts)
     print(f"calibrated over {len(fit_rows)} row(s): " +
           ", ".join(f"{k}={consts[k]:.3e}" for k in CONSTANT_KEYS))
+    for fam, fc in sorted(consts["families"].items()):
+        if fam != DEFAULT_CLASS:
+            print(f"family {fam}: " +
+                  ", ".join(f"{k}={v:.3e}" for k, v in fc.items()))
+    extra = {c: v for c, v in consts["overheads"].items()
+             if c != DEFAULT_CLASS}
+    if extra:
+        print("per-class overheads: " +
+              ", ".join(f"{c}={v:.3e}" for c, v in sorted(extra.items())))
 
     calibration = dict(consts)
     calibration["n_rows"] = len(fit_rows)
@@ -243,6 +341,7 @@ def main(argv=None) -> int:
         print(f"gating against {args.baseline} "
               f"(tolerance ×{tolerance}):")
         failures = gate(cur, base["ratios"], tolerance)
+        failures.extend(executor_overhead_failures(consts))
         if failures:
             for f_ in failures:
                 print(f"GATE FAIL: {f_}", file=sys.stderr)

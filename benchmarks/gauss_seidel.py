@@ -48,7 +48,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import (HaloExchange, HierarchicalCollectives,
+from repro.core import (Collectives, HaloExchange, HierarchicalCollectives,
                         TaskRuntime, tac)
 from repro.core.simulate import (Simulator, SimTask, COMPUTE, COMM_HELD,
                                  COMM_PAUSED, COMM_EVENTS)
@@ -95,8 +95,12 @@ def gs_block(block, top, left, bottom, right):
 # ---------------------------------------------------------------------------
 def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
              nby: int = 2, nbx: int = 2, bs: int = 16, iters: int = 3,
-             seed: int = 0):
+             seed: int = 0, notify: str = None):
     """Returns (final grid, stats).
+
+    ``notify`` picks the runtime's completion-notification backend
+    ("polling" / "continuation"; None = the REPRO_NOTIFY env default) —
+    the end-to-end parity legs run the same benchmark under both.
 
     Dataflow: grids[it][gy][gx]; block (gy,gx) at iteration it reads
     up/left from iteration it when the neighbour block is on the SAME
@@ -126,7 +130,7 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
     residuals: Dict = {}   # (rank, it) -> float | CollectiveHandle
     tac.init(tac.TASK_MULTIPLE if version.startswith("interop")
              else tac.THREAD_MULTIPLE)
-    rt = TaskRuntime(num_workers=workers)
+    rt = TaskRuntime(num_workers=workers, notify=notify)
     rt.start()
 
     def rank_of(gy, gx):
@@ -332,6 +336,223 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
 
 
 # ---------------------------------------------------------------------------
+# elastic execution: checkpoint / injected rank death / shrink / resume
+# ---------------------------------------------------------------------------
+def _blocks_of(grid: np.ndarray, NYb: int, NXb: int, bs: int):
+    """Re-block a global grid into the benchmark's NYb x NXb tile list."""
+    return [[grid[gy * bs:(gy + 1) * bs, gx * bs:(gx + 1) * bs].copy()
+             for gx in range(NXb)] for gy in range(NYb)]
+
+
+def _elastic_iteration(cart, hx, coll, prev, *, nby, nbx, bs, mode, rt, it):
+    """One halo-coupled Gauss–Seidel iteration over ANY decomposition.
+
+    ``prev`` is the previous iteration's global block list; returns
+    ``(next block list, global residual)``.  Per-rank halo tasks post the
+    neighbourhood exchange in TAMPI mode ``mode``; per-rank residual
+    tasks run the allreduce over the (possibly shrunken) communicator.
+    An injected rank death surfaces here as
+    :class:`~repro.core.executor.TaskError` out of the taskwait — the
+    machine that observes the dead peer revokes the communicator, so
+    every surviving task fails promptly instead of parking.
+    """
+    n_ranks = cart.size
+    NYb, NXb = len(prev), len(prev[0])
+    cur = [[None] * NXb for _ in range(NYb)]
+    zeros = np.zeros(bs)
+    halos: Dict[int, object] = {}
+    res: Dict[int, object] = {}
+
+    def rank_of(gy, gx):
+        return cart.rank_at((gy // nby, gx // nbx))
+
+    def halo_sends(r):
+        out = {}
+        for d, _ in hx.neighbors(r):
+            dim, disp = d
+            edge = 0 if disp < 0 else -1
+            out[d] = np.concatenate(
+                [prev[gy][gx][edge, :].copy() if dim == 0
+                 else prev[gy][gx][:, edge].copy()
+                 for gy, gx in edge_blocks(cart, nby, nbx, r, d)])
+        return out
+
+    def halo_edge(r, d, offset):
+        h = halos[r]
+        if isinstance(h, tac.AsyncHandle):
+            h = h.result
+        return h[d][offset * bs:(offset + 1) * bs]
+
+    def compute_block(gy, gx):
+        r = rank_of(gy, gx)
+        ry, rx = gy // nby, gx // nbx
+        if gy == 0:
+            top = zeros
+        elif gy % nby == 0:
+            top = halo_edge(r, (0, -1), gx - rx * nbx)
+        else:
+            top = cur[gy - 1][gx][-1, :]
+        if gx == 0:
+            left = zeros
+        elif gx % nbx == 0:
+            left = halo_edge(r, (1, -1), gy - ry * nby)
+        else:
+            left = cur[gy][gx - 1][:, -1]
+        if gy == NYb - 1:
+            bottom = zeros
+        elif (gy + 1) % nby == 0:
+            bottom = halo_edge(r, (0, 1), gx - rx * nbx)
+        else:
+            bottom = prev[gy + 1][gx][0, :]
+        if gx == NXb - 1:
+            right = zeros
+        elif (gx + 1) % nbx == 0:
+            right = halo_edge(r, (1, 1), gy - ry * nby)
+        else:
+            right = prev[gy][gx + 1][:, 0]
+        cur[gy][gx] = gs_block(prev[gy][gx], top, left, bottom, right)
+
+    def halo_task(r):
+        def body():
+            halos[r] = hx.start(halo_sends(r), rank=r, mode=mode,
+                                key=("eh", it))
+        return body
+
+    for r in range(n_ranks):
+        rt.submit(halo_task(r), out=[("halo", r, it)], label="comm",
+                  name=f"ehalo[{r}]@{it}")
+    for gy in range(NYb):
+        for gx in range(NXb):
+            r = rank_of(gy, gx)
+            deps = [("halo", r, it)]
+            if gy % nby:
+                deps.append(("blk", gy - 1, gx, it))
+            if gx % nbx:
+                deps.append(("blk", gy, gx - 1, it))
+            rt.submit(compute_block, gy, gx, in_=deps,
+                      out=[("blk", gy, gx, it)], label="compute",
+                      name=f"ec[{gy},{gx}]@{it}")
+    for r in range(n_ranks):
+        def res_task(r=r):
+            ry, rx = cart.coords(r)
+            tot = np.float64(sum(
+                float(np.abs(cur[gy][gx] - prev[gy][gx]).sum())
+                for gy in range(ry * nby, (ry + 1) * nby)
+                for gx in range(rx * nbx, (rx + 1) * nbx)))
+            res[r] = coll.allreduce(tot, rank=r, mode=mode, key=("er", it))
+        ry, rx = cart.coords(r)
+        rt.submit(res_task,
+                  in_=[("blk", gy, gx, it)
+                       for gy in range(ry * nby, (ry + 1) * nby)
+                       for gx in range(rx * nbx, (rx + 1) * nbx)],
+                  label="comm", name=f"eres[{r}]@{it}")
+    rt.taskwait()
+    vals = {r: float(v.result if isinstance(v, tac.AsyncHandle) else v)
+            for r, v in res.items()}
+    first = next(iter(vals.values()))
+    assert all(abs(v - first) < 1e-9 for v in vals.values()), vals
+    return cur, first
+
+
+def run_elastic(ckpt_dir: str, *, n_ranks: int = 4, workers: int = 2,
+                nby: int = 3, nbx: int = 3, bs: int = 8, iters: int = 4,
+                kill_iter: int = None, kill_rank: int = 0,
+                kill_after_ops: int = 1, mode: str = "event",
+                notify: str = None, seed: int = 0):
+    """Fault-tolerant Gauss–Seidel: the ULFM recovery loop end to end.
+
+    Every completed iteration checkpoints the global grid to
+    ``ckpt_dir`` (mesh-agnostic — the restore side may re-decompose).
+    With ``kill_iter`` set, a :class:`~repro.core.resilience.FaultInjector`
+    arms rank ``kill_rank`` to die at its ``kill_after_ops``-th posted
+    operation of that iteration (mid-halo / mid-collective); the failure
+    surfaces out of the taskwait, the survivors revoke + shrink
+    (:func:`repro.core.resilience.recover`), re-shape as a fresh
+    Cartesian grid over whatever decomposition divides the global blocks,
+    and resume from the last completed checkpoint step.  If a run starts
+    with checkpoints already in ``ckpt_dir`` it resumes from the latest
+    (which is how the parity test builds its clean reference).
+
+    Returns ``(final grid, info)`` where ``info`` records the residual
+    per completed step, the surviving decomposition, and each recovery.
+    """
+    from repro import checkpoint as checkpoint_lib
+    from repro.core import resilience
+    from repro.core.executor import TaskError
+
+    py, px = grid_dims(n_ranks)
+    NYb, NXb = py * nby, px * nbx
+    world = tac.CommWorld(n_ranks)
+    injector = resilience.FaultInjector(world)
+    tac.init(tac.TASK_MULTIPLE)
+
+    step = checkpoint_lib.latest_step(ckpt_dir)
+    if step is None:
+        rng = np.random.default_rng(seed)
+        grid = np.block([[rng.standard_normal((bs, bs))
+                          for _ in range(NXb)] for _ in range(NYb)])
+        checkpoint_lib.save_checkpoint(ckpt_dir, {"grid": grid}, 0)
+        step = 0
+    else:
+        state, step = checkpoint_lib.restore_checkpoint(
+            ckpt_dir, {"grid": np.empty((NYb * bs, NXb * bs))})
+        grid = state["grid"]
+
+    def shape_over(group_or_world, n):
+        spy, spx = grid_dims(n)
+        if NYb % spy or NXb % spx:
+            raise ValueError(f"global {NYb}x{NXb} blocks do not divide "
+                             f"over {n} survivors ({spy}x{spx})")
+        cart = (group_or_world.cart((spy, spx))
+                if hasattr(group_or_world, "cart")
+                else group_or_world.cart_create((spy, spx)))
+        return cart, NYb // spy, NXb // spx
+
+    cart, cur_nby, cur_nbx = shape_over(world, n_ranks)
+    hx, coll = HaloExchange(cart), Collectives(cart)
+    rt = TaskRuntime(num_workers=workers, notify=notify)
+    rt.start()
+    info = {"residuals": {}, "recoveries": []}
+
+    try:
+        while step < iters:
+            it = step + 1
+            if kill_iter is not None and it == kill_iter \
+                    and not injector.killed:
+                injector.arm(kill_rank, after_ops=kill_after_ops)
+            try:
+                blocks, resid = _elastic_iteration(
+                    cart, hx, coll, _blocks_of(grid, NYb, NXb, bs),
+                    nby=cur_nby, nbx=cur_nbx, bs=bs, mode=mode, rt=rt,
+                    it=it)
+            except TaskError:
+                # ULFM recovery: revoke (unstick peers), shrink
+                # (agreement on the survivors), re-decompose, restore.
+                injector.disarm()
+                rt.close()
+                shrunk = resilience.recover(world)
+                cart, cur_nby, cur_nbx = shape_over(shrunk, shrunk.size)
+                hx, coll = HaloExchange(cart), Collectives(cart)
+                rt = TaskRuntime(num_workers=workers, notify=notify)
+                rt.start()
+                state, step = checkpoint_lib.restore_checkpoint(
+                    ckpt_dir, {"grid": np.empty((NYb * bs, NXb * bs))})
+                grid = state["grid"]
+                info["recoveries"].append(
+                    {"at_iter": it, "killed": list(world.failed),
+                     "survivors": cart.size, "resumed_step": step})
+                continue
+            grid = np.block(blocks)
+            step = it
+            info["residuals"][step] = resid
+            checkpoint_lib.save_checkpoint(ckpt_dir, {"grid": grid}, step)
+    finally:
+        rt.close()
+    info["decomposition"] = (cart.size, cur_nby, cur_nbx)
+    return grid, info
+
+
+# ---------------------------------------------------------------------------
 # simulated scaling (paper Figs. 9/11/12/13)
 # ---------------------------------------------------------------------------
 def build_sim_graph(version, *, n_ranks, nby, nbx, iters,
@@ -490,6 +711,17 @@ def bench(print_fn=print, smoke: bool = False):
         assert err < 1e-10, (v, err)
         for it, val in ref_stats["residuals"].items():
             assert abs(st["residuals"][it] - val) < 1e-9, (v, it)
+
+    # end-to-end notification-backend legs: the same interop run under
+    # the polling engine and the continuation engine must agree with the
+    # pure reference bit for bit (and with each other).
+    for v in ("interop-blk", "interop-nonblk"):
+        for nb in ("polling", "continuation"):
+            t0 = time.monotonic()
+            out, _ = run_real(v, notify=nb)
+            dt = (time.monotonic() - t0) / 3
+            assert float(np.abs(out - ref).max()) < 1e-10, (v, nb)
+            rows.append((f"gs_e2e_{v}_{nb}", dt * 1e6, "notify-leg"))
 
     if smoke:
         # CI bench-smoke job: all five versions numerically agree (above)

@@ -54,8 +54,12 @@ def spectral_step(f: np.ndarray) -> np.ndarray:
 
 def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
              n_fields: int = 8, n_grid: int = 64, steps: int = 3,
-             seed: int = 0):
-    """Returns (final fields array, runtime stats)."""
+             seed: int = 0, notify: str = None):
+    """Returns (final fields array, runtime stats).
+
+    ``notify`` picks the runtime's completion-notification backend
+    ("polling" / "continuation"; None = the REPRO_NOTIFY env default).
+    """
     assert n_fields % n_ranks == 0 and n_grid % n_ranks == 0
     rng = np.random.default_rng(seed)
     pts = n_grid // n_ranks
@@ -68,7 +72,7 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
     exch: Dict = {}   # alltoall results (or event-bound handles)
     tac.init(tac.TASK_MULTIPLE if version.startswith("interop")
              else tac.THREAD_MULTIPLE)
-    rt = TaskRuntime(num_workers=workers)
+    rt = TaskRuntime(num_workers=workers, notify=notify)
     rt.start()
 
     def owner(f: int) -> int:
@@ -175,6 +179,160 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
 
 
 # ---------------------------------------------------------------------------
+# elastic execution: checkpoint / injected rank death / shrink / resume
+# ---------------------------------------------------------------------------
+def _elastic_step(comm, coll, fields: np.ndarray, *, mode, rt, it):
+    """One IFSKer timestep of the global ``fields`` array over ``comm``.
+
+    Works for ANY communicator size that divides both axes; physics and
+    the spectral step are decomposition-independent, so the result is
+    bitwise identical at every rank count — which is what lets a
+    shrunken world resume a dead one's checkpoint exactly.
+    """
+    n_ranks = comm.size
+    n_fields, n_grid = fields.shape
+    pts = n_grid // n_ranks
+    grid = {(f, r): fields[f, r * pts:(r + 1) * pts].copy()
+            for f in range(n_fields) for r in range(n_ranks)}
+    spec: Dict = {}
+    exch: Dict = {}
+    fields_of = {o: [f for f in range(n_fields) if f % n_ranks == o]
+                 for o in range(n_ranks)}
+
+    def phys_task(f, r):
+        grid[(f, r)] = physics(grid[(f, r)])
+
+    def a2a_g2s(r):
+        blocks = [np.concatenate([grid[(f, r)] for f in fields_of[o]])
+                  for o in range(n_ranks)]
+        exch[("g2s", r)] = coll.alltoall(blocks, rank=r, mode=mode,
+                                         key=("eg2s", it))
+
+    def fft_field(f):
+        o = f % n_ranks
+        parts = exch[("g2s", o)]
+        if isinstance(parts, tac.AsyncHandle):
+            parts = parts.result
+        j = fields_of[o].index(f)
+        full = np.concatenate([parts[s][j * pts:(j + 1) * pts]
+                               for s in range(n_ranks)])
+        spec[f] = spectral_step(full)
+
+    def a2a_s2g(o):
+        blocks = [np.concatenate([spec[f][r * pts:(r + 1) * pts]
+                                  for f in fields_of[o]])
+                  for r in range(n_ranks)]
+        exch[("s2g", o)] = coll.alltoall(blocks, rank=o, mode=mode,
+                                         key=("es2g", it))
+
+    def unpack(r):
+        parts = exch[("s2g", r)]
+        if isinstance(parts, tac.AsyncHandle):
+            parts = parts.result
+        for o in range(n_ranks):
+            for j, f in enumerate(fields_of[o]):
+                grid[(f, r)] = parts[o][j * pts:(j + 1) * pts]
+
+    for r in range(n_ranks):
+        for f in range(n_fields):
+            rt.submit(phys_task, f, r, inout=[("g", f, r)],
+                      name=f"ephys[{f},{r}]@{it}", label="compute")
+    for r in range(n_ranks):
+        rt.submit(a2a_g2s, r, in_=[("g", f, r) for f in range(n_fields)],
+                  out=[("xg", r, it)], label="comm",
+                  name=f"ea2a_g2s[{r}]@{it}")
+    for f in range(n_fields):
+        rt.submit(fft_field, f, in_=[("xg", f % n_ranks, it)],
+                  out=[("s", f)], label="compute", name=f"efft[{f}]@{it}")
+    for o in range(n_ranks):
+        rt.submit(a2a_s2g, o, in_=[("s", f) for f in fields_of[o]],
+                  out=[("xs", o, it)], label="comm",
+                  name=f"ea2a_s2g[{o}]@{it}")
+    for r in range(n_ranks):
+        rt.submit(unpack, r, in_=[("xs", r, it)],
+                  inout=[("g", f, r) for f in range(n_fields)],
+                  label="compute", name=f"eunp[{r}]@{it}")
+    rt.taskwait()
+    return np.stack([np.concatenate([grid[(f, r)]
+                                     for r in range(n_ranks)])
+                     for f in range(n_fields)])
+
+
+def run_elastic(ckpt_dir: str, *, n_ranks: int = 4, workers: int = 2,
+                n_fields: int = 12, n_grid: int = 24, steps: int = 4,
+                kill_step: int = None, kill_rank: int = 0,
+                kill_after_ops: int = 1, mode: str = "event",
+                notify: str = None, seed: int = 0):
+    """Fault-tolerant IFSKer: checkpoint each step, survive an injected
+    rank death mid-transposition, shrink, resume (see
+    ``gauss_seidel.run_elastic`` for the recovery protocol).  The axes
+    must divide every rank count the run may shrink to (defaults: 12
+    fields / 24 points over 4 ranks survive the loss of one).
+
+    Returns ``(final fields, info)``.
+    """
+    from repro import checkpoint as checkpoint_lib
+    from repro.core import resilience
+    from repro.core.executor import TaskError
+
+    world = tac.CommWorld(n_ranks)
+    injector = resilience.FaultInjector(world)
+    tac.init(tac.TASK_MULTIPLE)
+
+    step = checkpoint_lib.latest_step(ckpt_dir)
+    if step is None:
+        rng = np.random.default_rng(seed)
+        fields = rng.standard_normal((n_fields, n_grid))
+        checkpoint_lib.save_checkpoint(ckpt_dir, {"fields": fields}, 0)
+        step = 0
+    else:
+        state, step = checkpoint_lib.restore_checkpoint(
+            ckpt_dir, {"fields": np.empty((n_fields, n_grid))})
+        fields = state["fields"]
+
+    comm = world
+    coll = Collectives(world)
+    rt = TaskRuntime(num_workers=workers, notify=notify)
+    rt.start()
+    info = {"recoveries": []}
+
+    try:
+        while step < steps:
+            it = step + 1
+            if kill_step is not None and it == kill_step \
+                    and not injector.killed:
+                injector.arm(kill_rank, after_ops=kill_after_ops)
+            try:
+                fields = _elastic_step(comm, coll, fields, mode=mode,
+                                       rt=rt, it=it)
+            except TaskError:
+                injector.disarm()
+                rt.close()
+                shrunk = resilience.recover(world)
+                if n_fields % shrunk.size or n_grid % shrunk.size:
+                    raise ValueError(
+                        f"{n_fields} fields / {n_grid} points do not "
+                        f"divide over {shrunk.size} survivors")
+                comm, coll = shrunk, Collectives(shrunk)
+                rt = TaskRuntime(num_workers=workers, notify=notify)
+                rt.start()
+                state, step = checkpoint_lib.restore_checkpoint(
+                    ckpt_dir, {"fields": np.empty((n_fields, n_grid))})
+                fields = state["fields"]
+                info["recoveries"].append(
+                    {"at_step": it, "killed": list(world.failed),
+                     "survivors": comm.size, "resumed_step": step})
+                continue
+            step = it
+            checkpoint_lib.save_checkpoint(ckpt_dir, {"fields": fields},
+                                           step)
+    finally:
+        rt.close()
+    info["size"] = comm.size
+    return fields, info
+
+
+# ---------------------------------------------------------------------------
 # simulated scaling (Fig. 14)
 # ---------------------------------------------------------------------------
 def build_sim(version, *, n_ranks, n_fields=64, steps=6, t_phys=1.0,
@@ -243,6 +401,15 @@ def bench(print_fn=print):
         out, stats = run_real(v)
         err = float(np.abs(out - ref).max())
         assert err < 1e-10, (v, err)
+
+    # end-to-end notification-backend legs: both engines, same numerics.
+    for v in VERSIONS[1:]:
+        for nb in ("polling", "continuation"):
+            t0 = time.monotonic()
+            out, _ = run_real(v, notify=nb)
+            dt = (time.monotonic() - t0) / 3
+            assert float(np.abs(out - ref).max()) < 1e-10, (v, nb)
+            rows.append((f"ifsker_e2e_{v}_{nb}", dt * 1e6, "notify-leg"))
 
     for v in VERSIONS:
         t0 = time.monotonic()

@@ -24,10 +24,13 @@ from . import simulate
 from . import collectives
 from . import lowering
 from . import overlap
+from . import resilience
 from .schedule import Schedule, build_neighbor, best_schedule
 from .collectives import (Collectives, CollectiveHandle, HaloExchange,
                           HierarchicalCollectives, PersistentCollective)
-from .tac import CommWorld, CommGroup, CartGroup, DistGraphGroup
+from .tac import (CommWorld, CommGroup, CartGroup, DistGraphGroup,
+                  RankFailedError, CommRevokedError)
+from .resilience import FaultInjector
 
 __all__ = [
     # pause/resume API (§4.1)
@@ -52,4 +55,6 @@ __all__ = [
     "HierarchicalCollectives",
     # persistent collectives (MPI_*_init analogue)
     "PersistentCollective",
+    # ULFM-style fault tolerance (elastic worlds)
+    "resilience", "FaultInjector", "RankFailedError", "CommRevokedError",
 ]

@@ -180,25 +180,12 @@ def n_rounds(name: str, algorithm: str, size: int) -> int:
 class CollectiveHandle(tac.EventHandle):
     """Completion handle of an event-bound collective (result at release).
 
-    A schedule failure (bad payloads, a raising ``op``...) completes the
-    handle with the exception stored; ``result`` re-raises it on whichever
-    thread consumes the collective, so errors surface instead of killing
-    the polling service or hanging ``taskwait``.
+    A schedule failure (bad payloads, a raising ``op``, a dead peer's
+    :class:`~repro.core.tac.RankFailedError`...) completes the handle via
+    :meth:`~repro.core.tac.EventHandle.fail`; ``result`` re-raises it on
+    whichever thread consumes the collective, so errors surface instead
+    of killing the polling service or hanging ``taskwait``.
     """
-
-    def __init__(self) -> None:
-        super().__init__()
-        self.error: Optional[BaseException] = None
-
-    def fail(self, exc: BaseException) -> None:
-        self.error = exc
-        self.complete(None)
-
-    @property
-    def result(self) -> Any:
-        if self.error is not None:
-            raise self.error
-        return self._result
 
 
 # ---------------------------------------------------------------------------
@@ -214,14 +201,15 @@ class _Machine:
     group driver is single-threaded).
     """
 
-    __slots__ = ("gen", "handle", "counter", "steps", "done", "_waiting",
-                 "_started")
+    __slots__ = ("gen", "handle", "counter", "comm", "steps", "done",
+                 "_waiting", "_started")
 
     def __init__(self, gen, handle: CollectiveHandle,
-                 counter=None) -> None:
+                 counter=None, comm=None) -> None:
         self.gen = gen
         self.handle = handle
         self.counter = counter
+        self.comm = comm        # revoked on peer failure (ULFM recovery)
         self.steps = 0          # resolved waits — progress indicator
         self.done = False
         self._waiting: Any = None
@@ -255,6 +243,18 @@ class _Machine:
             # the task's event counter bound forever — fail the handle
             # (consumers re-raise) and release the dependency.
             self.done = True
+            if (self.comm is not None
+                    and isinstance(exc, tac.RankFailedError)
+                    and not isinstance(exc, tac.CommRevokedError)):
+                # ULFM recovery step 1: the rank that observes a peer
+                # failure mid-collective revokes the communicator, so
+                # every *other* rank's pending rounds fail too instead of
+                # parking forever on sends the aborted ranks will never
+                # post.  CommRevokedError is excluded — a machine killed
+                # by the revoke itself must not re-revoke.
+                revoke = getattr(self.comm, "revoke", None)
+                if revoke is not None:
+                    revoke()
             self.handle.fail(exc)
             if self.counter is not None:
                 decrease_task_event_counter(self.counter, 1)
@@ -386,7 +386,7 @@ def _drive_blocking(gen):
         return stop.value
 
 
-def _execute_schedule(gen, mode: str):
+def _execute_schedule(gen, mode: str, comm=None):
     """Run one rank's schedule in an interoperability mode (normalized).
 
     Shared by every collective family (world-wide, neighbourhood,
@@ -395,7 +395,8 @@ def _execute_schedule(gen, mode: str):
     Inside a task the progress engine advances the rounds from the polling
     service: ``blocking`` pays one pause on the completion handle,
     ``event`` binds the handle to the task's event counter and returns it
-    immediately.
+    immediately.  ``comm`` is the communicator to revoke if a peer dies
+    mid-schedule (see :meth:`_Machine.advance`).
     """
     task = current_task()
     if not (tac.is_enabled() and task is not None):
@@ -407,11 +408,11 @@ def _execute_schedule(gen, mode: str):
         return handle
     handle = CollectiveHandle()
     if mode == "blocking":
-        _engine(task._runtime).submit(_Machine(gen, handle))
+        _engine(task._runtime).submit(_Machine(gen, handle, comm=comm))
         return tac.wait(handle)
     counter = get_current_event_counter()
     increase_current_task_event_counter(counter, 1)
-    _engine(task._runtime).submit(_Machine(gen, handle, counter))
+    _engine(task._runtime).submit(_Machine(gen, handle, counter, comm=comm))
     return handle
 
 
@@ -527,7 +528,8 @@ def _interpret(sched: Schedule, comm, rank: int, tag, *, value=None,
     if kind == "list":
         return [env[("g", i)] for i in range(sched.n)]
     if kind == "dirs":
-        return {d: env[("rv", d)] for d in sched.out_dirs[rank]}
+        rv_dirs = sched.in_dirs or sched.out_dirs
+        return {d: env[("rv", d)] for d in rv_dirs[rank]}
     raise ValueError(f"unknown output kind {kind!r}")  # pragma: no cover
 
 
@@ -688,7 +690,8 @@ class Collectives:
         if algorithm is not None:
             _norm_alg(algorithm)
         return _execute_schedule(
-            self._schedule(name, algorithm, rank, key, **kw), mode)
+            self._schedule(name, algorithm, rank, key, **kw), mode,
+            comm=self.comm)
 
     def predict(self, name: str, nbytes: int, *,
                 algorithm: Optional[str] = None,
@@ -789,7 +792,7 @@ class Collectives:
             gen = _interpret(sched, self.comm, rank,
                              self._tagger("neighbor_alltoall", rank, key),
                              sends=sends)
-        return _execute_schedule(gen, mode)
+        return _execute_schedule(gen, mode, comm=self.comm)
 
     # -- persistent collectives (MPI_*_init analogue) ----------------------
     def persistent(self, name: str, *, algorithm: Optional[str] = None,
@@ -932,16 +935,30 @@ class PersistentCollective:
             return ("pers", self._id, key, sub)
         return tag
 
+    def _plan(self):
+        """The compiled plan, recompiled when the communicator epoch
+        moved — a rank failure or revoke invalidated the cached program
+        and the first post after recovery rebuilds it automatically
+        (:func:`repro.core.program.epoch_of`)."""
+        prog = self._prog
+        if (prog is not None
+                and prog.epoch != program_ir.epoch_of(self.coll.comm)):
+            prog = self._prog = program_ir.compile_schedule(
+                self.sched, self.coll.comm, op=self.op,
+                head=("pers", self._id))
+        return prog
+
     def _gen(self, rank: int, key: Any, value, blocks):
         if not 0 <= rank < self.sched.n:
             raise ValueError(f"rank {rank} out of range for n="
                              f"{self.sched.n}")
         if self.sched.input_kind == "blocks" and blocks is None:
             blocks = list(value) if value is not None else None
-        if self._prog is not None:
+        prog = self._plan()
+        if prog is not None:
             if key is None:
                 key = next(self._seq[rank])
-            return self._prog.gen(rank, key, value=value, blocks=blocks)
+            return prog.gen(rank, key, value=value, blocks=blocks)
         return _interpret(self.sched, self.coll.comm, rank,
                           self._tagger(rank, key), value=value,
                           op=self.op, blocks=blocks)
@@ -952,7 +969,7 @@ class PersistentCollective:
         """Post this rank's pre-built schedule; same mode contract as the
         one-shot collectives."""
         return _execute_schedule(self._gen(rank, key, value, blocks),
-                                 _norm_mode(mode))
+                                 _norm_mode(mode), comm=self.coll.comm)
 
     def run_group(self, per_rank_values: Sequence[Any],
                   key: Any = None) -> List[Any]:
@@ -999,7 +1016,15 @@ def _neighbor_schedule(comm) -> Schedule:
                 "neighbourhood collectives need a communicator with a "
                 "topology — build a Cartesian one with CommWorld.cart_create "
                 "or a graph one with CommWorld.dist_graph_create")
-        sched = schedule_ir.build_neighbor(topology())
+        # Directed topologies (one-way dist-graph edges) declare their
+        # receive directions separately; symmetric ones return None here.
+        in_topology = getattr(comm, "in_topology", None)
+        in_topo = in_topology() if in_topology is not None else None
+        # Call with one arg when symmetric so the lru_cache key matches
+        # direct ``build_neighbor(topology())`` calls (shared identity).
+        sched = (schedule_ir.build_neighbor(topology(), in_topo)
+                 if in_topo is not None
+                 else schedule_ir.build_neighbor(topology()))
         comm._neighbor_sched = sched
     return sched
 
@@ -1068,12 +1093,24 @@ class HaloExchange:
             return ("halo", self._id, key, sub)
         return tag
 
+    def _plan(self):
+        """The compiled plan, recompiled when the communicator epoch
+        moved (automatic rebuild after failure recovery — see
+        :meth:`PersistentCollective._plan`)."""
+        prog = self._prog
+        if (prog is not None
+                and prog.epoch != program_ir.epoch_of(self.cart)):
+            prog = self._prog = program_ir.compile_schedule(
+                self.sched, self.cart, head=("halo", self._id))
+        return prog
+
     def _gen(self, rank: int, key: Any, sends):
         sends = _check_dir_payloads(sends, self.sched.out_dirs[rank])
-        if self._prog is not None:
+        prog = self._plan()
+        if prog is not None:
             if key is None:
                 key = next(self._seq[rank])
-            return self._prog.gen(rank, key, sends=sends)
+            return prog.gen(rank, key, sends=sends)
         return _interpret(self.sched, self.cart, rank,
                           self._tagger(rank, key), sends=sends)
 
@@ -1081,7 +1118,8 @@ class HaloExchange:
               mode: str = "event", key: Any = None):
         """Post this rank's halo round; see the class docstring for modes."""
         mode = _norm_mode(mode)
-        return _execute_schedule(self._gen(rank, key, sends), mode)
+        return _execute_schedule(self._gen(rank, key, sends), mode,
+                                 comm=self.cart)
 
     def exchange(self, sends: Dict[Any, Any], *, rank: int,
                  key: Any = None):
@@ -1243,7 +1281,7 @@ class HierarchicalCollectives:
         self.world.world_rank(rank)   # identity hook: validates the rank
         gen = (self._composed_gen(rank, key, value, op) if composed
                else self._schedule(rank, key, value, op))
-        return _execute_schedule(gen, mode)
+        return _execute_schedule(gen, mode, comm=self.world)
 
     def persistent(self, *, op="sum") -> "PersistentHierarchical":
         """Pre-resolve the three-stage composition for per-iteration

@@ -185,10 +185,10 @@ def _compile_finish(sched: Schedule) -> Optional[Callable]:
         def finish(env, shape, rank):
             return [env[g] for g in names]
     elif kind == "dirs":
-        out_dirs = sched.out_dirs
+        rv_dirs = sched.in_dirs or sched.out_dirs
 
         def finish(env, shape, rank):
-            return {d: env[("rv", d)] for d in out_dirs[rank]}
+            return {d: env[("rv", d)] for d in rv_dirs[rank]}
     else:                           # pragma: no cover - new output kinds
         raise ValueError(f"unknown output kind {kind!r}")
     return finish
@@ -222,8 +222,9 @@ class CompiledProgram:
     collective match on the wire.
     """
 
-    __slots__ = ("sched", "comm", "op", "head", "_ranks", "_finish",
-                 "_isend", "_irecv", "_wranks", "_mktag", "_lock")
+    __slots__ = ("sched", "comm", "op", "head", "epoch", "_ranks",
+                 "_finish", "_isend", "_irecv", "_wranks", "_mktag",
+                 "_lock")
 
     def __init__(self, sched: Schedule, comm, *, op: Optional[Callable],
                  head: Tuple[Any, ...]) -> None:
@@ -234,6 +235,7 @@ class CompiledProgram:
         self.comm = comm
         self.op = op
         self.head = head
+        self.epoch = epoch_of(comm)
         self._ranks: List[Optional[_RankPlan]] = [None] * sched.n
         self._finish = _compile_finish(sched)
         self._lock = threading.Lock()
@@ -290,6 +292,12 @@ class CompiledProgram:
         if not 0 <= rank < self.sched.n:
             raise ValueError(
                 f"rank {rank} out of range for n={self.sched.n}")
+        if epoch_of(self.comm) != self.epoch:
+            raise StaleProgramError(
+                f"compiled program {self.head!r} was built at communicator "
+                f"epoch {self.epoch} but the communicator is now at epoch "
+                f"{epoch_of(self.comm)} (a rank failed or the communicator "
+                f"was revoked) — recompile via compile_schedule()")
         plan = self._rank_plan(rank)
         return self._run(plan, rank, key, value, blocks, sends)
 
@@ -338,23 +346,51 @@ class CompiledProgram:
 # ---------------------------------------------------------------------------
 CACHE_MAX = 256
 
-_cache: Dict[Tuple[int, int, Any, Any], CompiledProgram] = {}
+_cache: Dict[Tuple[int, int, int, Any, Any], CompiledProgram] = {}
 _cache_lock = threading.Lock()
 _stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+class StaleProgramError(RuntimeError):
+    """A compiled program outlived its communicator epoch.
+
+    Raised by :meth:`CompiledProgram.gen` when the communicator was
+    revoked or lost a rank after the program was compiled; the holder
+    must recompile (``compile_schedule`` with the bumped epoch in its key
+    returns a fresh program).  Persistent wrappers
+    (:class:`repro.core.collectives.PersistentCollective`,
+    :class:`repro.core.collectives.HaloExchange`) do this automatically.
+    """
+
+
+def epoch_of(comm) -> int:
+    """The communicator's failure epoch (0 for epoch-less communicators).
+
+    :class:`repro.core.tac.CommWorld` bumps its ``epoch`` on every
+    ``fail_rank``/``revoke``; a :class:`~repro.core.tac.CommGroup`
+    inherits the parent world's.  The epoch is part of the plan-cache
+    key, so a failure invalidates every cached plan over the affected
+    communicator without any explicit flush.
+    """
+    return getattr(comm, "epoch", 0)
 
 
 def compile_schedule(sched: Schedule, comm, *, op: Optional[Callable] = None,
                      head: Tuple[Any, ...] = ("prog",)) -> CompiledProgram:
     """The cached entry point: one :class:`CompiledProgram` per
-    (schedule identity, communicator identity, op, tag family).
+    (schedule identity, communicator identity, communicator epoch, op,
+    tag family).
 
     ``op`` must be the *resolved* combine callable (``_op_fn`` output) —
     named ops resolve to shared module-level functions, so ``"sum"``
     callers share an entry.  Insertion order doubles as the FIFO eviction
     order beyond :data:`CACHE_MAX`; entries pin their schedule and
-    communicator (see module docstring on identity keying).
+    communicator (see module docstring on identity keying).  The epoch
+    term (:func:`epoch_of`) makes failure recovery automatic: after a
+    ``fail_rank``/``revoke`` the old entries are unreachable and the
+    first caller compiles a fresh plan.
     """
-    key = (id(sched), id(comm), op, head)
+    key = (id(sched), id(comm), epoch_of(comm), op, head)
     with _cache_lock:
         prog = _cache.get(key)
         if prog is not None:

@@ -55,7 +55,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
     "Op", "Send", "Recv", "Combine", "Copy", "Pack", "Unpack", "Slice",
@@ -247,7 +247,8 @@ class Schedule:
     ``buf``                 ``env[out_bufs[rank]]`` (``None`` slot → ``None``)
     ``concat``              chunks concatenated and reshaped (ring allreduce)
     ``list``                ``[env[("g", i)] for i in range(n)]``
-    ``dirs``                ``{d: env[("rv", d)] for d in out_dirs[rank]}``
+    ``dirs``                ``{d: env[("rv", d)] for d in (in_dirs or
+                            out_dirs)[rank]}``
     ======================  ====================================================
     """
     name: str
@@ -259,6 +260,11 @@ class Schedule:
     segments: int = 1
     out_bufs: Tuple[Any, ...] = ()
     out_dirs: Tuple[Tuple[Any, ...], ...] = ()
+    # Receive directions per rank for asymmetric (directed) neighbourhood
+    # schedules.  Empty means receives mirror sends (the symmetric case:
+    # every out direction has a reciprocal in direction), which is every
+    # schedule built before directed dist-graphs existed.
+    in_dirs: Tuple[Tuple[Any, ...], ...] = ()
     chunk_bufs: Tuple[Any, ...] = ()
     # ``chunks`` inputs split into this many outer chunks (0 -> ``n``, the
     # flat-ring convention).  Hierarchical schedules split into the INTRA
@@ -347,7 +353,8 @@ class Schedule:
         if self.output_kind == "list":
             return [("g", i) for i in range(self.n)]
         if self.output_kind == "dirs":
-            return [("rv", d) for d in self.out_dirs[rank]]
+            dirs = self.in_dirs or self.out_dirs
+            return [("rv", d) for d in dirs[rank]]
         return []
 
     def wait_plan(self, rank: int) -> Tuple[
@@ -991,30 +998,54 @@ def _trivial(name: str, algorithm: str) -> Schedule:
 
 
 @functools.lru_cache(maxsize=256)
-def build_neighbor(topology: Tuple[Tuple[Tuple[Any, int], ...], ...]
-                   ) -> Schedule:
+def build_neighbor(topology: Tuple[Tuple[Tuple[Any, int], ...], ...],
+                   in_topology: Optional[
+                       Tuple[Tuple[Any, ...], ...]] = None) -> Schedule:
     """Neighbourhood all-to-all over a fixed topology.
 
-    ``topology[r]`` is rank r's persistent neighbour list ``(((dim, ±1),
-    neighbour), ...)`` — the shape produced by
+    ``topology[r]`` is rank r's persistent *send* neighbour list
+    ``(((dim, ±1), neighbour), ...)`` — the shape produced by
     :meth:`repro.core.tac.CartGroup.neighbor_dirs` /
     :meth:`repro.core.tac.CartGroup.topology`.  Rank r sends its
     ``("s", d)`` buffer toward each direction ``d``; the payload lands in
-    the neighbour's ``("rv", opp(d))`` buffer (reciprocity: if r's
+    the neighbour's ``("rv", opp(d))`` buffer where ``opp(d) = (d[0],
+    -d[1])``.  By default receives mirror sends (reciprocity: if r's
     ``d``-neighbour is q, then q's ``-d``-neighbour is r).
+
+    For a **directed** topology (one-way edges —
+    :meth:`repro.core.tac.DistGraphGroup.in_topology`), pass
+    ``in_topology[r]`` = rank r's receive-direction labels.  The derived
+    arrivals are validated against the declaration: every send must land
+    on a declared in-direction of its destination, and every declared
+    in-direction must be fed by exactly one send.
     """
     n = len(topology)
     b = _B(n)
+    derived_in: List[List[Any]] = [[] for _ in range(n)]
     for r, dirs in enumerate(topology):
         for d, nbr in dirs:
             dim, disp = d
             opp = (dim, -disp)
             b.xfer(r, nbr, ("s", d), ("rv", opp), tag=("n", d, r))
+            derived_in[nbr].append(opp)
     out_dirs = tuple(tuple(d for d, _ in dirs) for dirs in topology)
+    in_dirs: Tuple[Tuple[Any, ...], ...] = ()
+    if in_topology is not None:
+        if len(in_topology) != n:
+            raise ValueError(f"in_topology covers {len(in_topology)} ranks, "
+                             f"topology has {n}")
+        in_dirs = tuple(tuple(dirs) for dirs in in_topology)
+        for r in range(n):
+            declared, derived = list(in_dirs[r]), derived_in[r]
+            if sorted(declared, key=repr) != sorted(derived, key=repr):
+                raise ValueError(
+                    f"rank {r}: declared in-directions {declared} do not "
+                    f"match the directions arriving from the send "
+                    f"topology {sorted(derived, key=repr)}")
     sched = Schedule(name="neighbor_alltoall", algorithm="neighbor", n=n,
                      programs=tuple(tuple(p) for p in b.programs),
                      input_kind="dirs", output_kind="dirs",
-                     out_dirs=out_dirs)
+                     out_dirs=out_dirs, in_dirs=in_dirs)
     return _fix_recv_order(sched).validate()
 
 

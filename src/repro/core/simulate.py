@@ -92,6 +92,7 @@ class SimResult:
     held_wait_time: Dict[int, float]      # worker-seconds wasted holding
     max_paused: int                        # peak #paused tasks (live stacks)
     resumes: int                           # scheduler round trips paid
+    failed: Set[int] = field(default_factory=set)  # tasks lost to rank death
 
     def utilization(self, workers_per_rank: int, n_ranks: int) -> float:
         total = self.makespan * workers_per_rank * n_ranks
@@ -121,7 +122,21 @@ class Simulator:
         self.resume_overhead = resume_overhead
         self.dispatch_overhead = dispatch_overhead
 
-    def run(self, tasks: List[SimTask]) -> SimResult:
+    def run(self, tasks: List[SimTask],
+            fail: Optional[Tuple[int, float]] = None) -> SimResult:
+        """Replay the task graph; ``fail=(rank, time)`` injects rank death.
+
+        Simulated ULFM semantics (deterministic large-n replay of what
+        :class:`repro.core.resilience.FaultInjector` does to the real
+        runtime): at ``time`` the rank's workers stop — its queued tasks
+        never dispatch, its in-flight bodies never complete — while
+        anything the dead rank finished *before* the failure stays
+        delivered (messages in flight arrive).  Tasks that consequently
+        never complete (the dead rank's remainder plus its transitive
+        dependency cone, through start, event, neighbour, and collective
+        edges alike) are reported in :attr:`SimResult.failed` instead of
+        raising the deadlock error; the makespan covers the survivors.
+        """
         byid = {t.id: t for t in tasks}
         succ_start: Dict[int, List[Dep]] = {t.id: [] for t in tasks}
         succ_event: Dict[int, List[Dep]] = {t.id: [] for t in tasks}
@@ -199,6 +214,14 @@ class Simulator:
         def push(t: float, kind: str, tid: int) -> None:
             heapq.heappush(heap, (t, next(seq), kind, tid))
 
+        dead_ranks: Set[int] = set()
+        if fail is not None:
+            fail_rank, fail_time = fail
+            if not 0 <= fail_rank < self.n_ranks:
+                raise ValueError(f"fail rank {fail_rank} out of range for "
+                                 f"{self.n_ranks} ranks")
+            push(float(fail_time), "rank-fail", fail_rank)
+
         now = 0.0
         for t in tasks:
             if t._pending_start == 0:
@@ -212,6 +235,8 @@ class Simulator:
 
         def dispatch(rank: int, t: float) -> None:
             nonlocal paused, resumes
+            if rank in dead_ranks:
+                return          # dead workers dispatch nothing
             while free[rank] > 0 and (resume_q[rank] or ready[rank]):
                 if resume_q[rank]:
                     task = resume_q[rank].pop(0)
@@ -239,8 +264,17 @@ class Simulator:
         flush(now)
         while heap:
             now, _, kind, tid = heapq.heappop(heap)
+            if kind == "rank-fail":
+                dead_ranks.add(tid)
+                continue
             task = byid[tid]
             r = task.rank
+            if r in dead_ranks:
+                # The dead rank's pending events evaporate: a body that
+                # was mid-flight at the failure never completes, so none
+                # of its outgoing message/collective edges ever fire —
+                # while everything it finished earlier stays delivered.
+                continue
             if kind == "start-arr":
                 task._pending_start -= 1
                 if task._pending_start == 0:
@@ -309,16 +343,18 @@ class Simulator:
                 flush(now)
 
         unfinished = [t for t in tasks if t.done_time is None]
-        if unfinished:
+        if unfinished and fail is None:
             names = [t.name or str(t.id) for t in unfinished[:5]]
             raise RuntimeError(
                 f"simulation deadlock: {len(unfinished)} tasks never "
                 f"completed (e.g. {names}) — exactly the §5 scenario")
-        makespan = max(t.done_time for t in tasks) if tasks else 0.0
+        finished = [t for t in tasks if t.done_time is not None]
+        makespan = max((t.done_time for t in finished), default=0.0)
         return SimResult(makespan=makespan,
-                         done_times={t.id: t.done_time for t in tasks},
+                         done_times={t.id: t.done_time for t in finished},
                          busy_time=busy, held_wait_time=held,
-                         max_paused=max_paused, resumes=resumes)
+                         max_paused=max_paused, resumes=resumes,
+                         failed={t.id for t in unfinished})
 
 
 # ---------------------------------------------------------------------------

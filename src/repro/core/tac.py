@@ -76,6 +76,42 @@ def is_enabled() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Failure model (ULFM: MPI_ERR_PROC_FAILED / MPI_ERR_REVOKED)
+# ---------------------------------------------------------------------------
+class RankFailedError(RuntimeError):
+    """A peer involved in this operation is dead (MPI_ERR_PROC_FAILED).
+
+    Raised from ``handle.result`` (and therefore from :func:`wait`, from a
+    continuation's reader, and from a collective's consumer) — never from
+    the posting call itself, matching ULFM's error-on-completion model.
+    ``rank`` is the failed world rank when known.
+    """
+
+    def __init__(self, rank: Optional[int] = None,
+                 message: Optional[str] = None) -> None:
+        self.rank = rank
+        if message is None:
+            message = (f"rank {rank} failed" if rank is not None
+                       else "a peer rank failed")
+        super().__init__(message)
+
+
+class CommRevokedError(RankFailedError):
+    """The communicator was revoked (MPI_ERR_REVOKED).
+
+    A subclass of :class:`RankFailedError` so recovery code that catches
+    the failure also catches the revocation that propagates it.  After a
+    revoke, every pending and future operation on the communicator fails
+    with this error until the survivors complete a :meth:`CommWorld.shrink`
+    agreement.
+    """
+
+    def __init__(self, rank: Optional[int] = None,
+                 message: Optional[str] = None) -> None:
+        super().__init__(rank, message or "communicator revoked")
+
+
+# ---------------------------------------------------------------------------
 # Asynchronous handles ("MPI_Request" analogues)
 # ---------------------------------------------------------------------------
 class AsyncHandle:
@@ -125,11 +161,44 @@ class EventHandle(PushCompletion, AsyncHandle):
     is idempotent (the first completion wins and fires the callbacks
     exactly once) — a buffered send may be locally complete before its
     match confirms it.
+
+    A handle may also complete *erroneously* via :meth:`fail` — the ULFM
+    failure path: the handle is done (``test()`` is True, callbacks fire,
+    waiters wake) but ``result`` re-raises the stored exception on every
+    consumer.  That is what lets a dead peer surface as a
+    :class:`RankFailedError` at task granularity instead of a hung
+    ``taskwait``: the failure rides the exact same push-notification
+    plumbing as success.
     """
 
     def __init__(self) -> None:
         super().__init__()
         self._result: Any = None
+        self.error: Optional[BaseException] = None
+
+    @property
+    def result(self) -> Any:
+        if self.error is not None:
+            raise self.error
+        return self._result
+
+    def fail(self, exc: BaseException) -> None:
+        """Complete erroneously: consumers of ``result`` re-raise ``exc``.
+
+        Idempotent like :meth:`complete`, and a no-op on an
+        already-successful handle (the first completion wins — a message
+        delivered before the failure was detected stays delivered).
+        """
+        with self._cb_lock:
+            if self._done:
+                return
+            self.error = exc
+            self._done = True
+            if self._waiter is not None:
+                self._waiter.set()
+            cbs, self._cbs = self._cbs, []
+        for cb in cbs:
+            cb(self)
 
     def complete(self, result: Any = None) -> None:
         # Open-coded _complete_once(assign): this runs 2-3 times per
@@ -148,7 +217,7 @@ class EventHandle(PushCompletion, AsyncHandle):
 
     def wait(self) -> Any:
         self._wait_event().wait()
-        return self._result
+        return self.result
 
 
 class FutureHandle(AsyncHandle):
@@ -242,14 +311,43 @@ class CommWorld:
         self._group_seq = itertools.count()   # communicator context ids
         self._split_calls = [0] * size        # per-rank split generation
         self._splits: Dict[int, dict] = {}    # generation -> rank -> call
+        # -- failure model (ULFM) -------------------------------------------
+        self.epoch = 0                        # bumped on fail/revoke/shrink
+        self._failed: set = set()             # dead world ranks
+        self._revoked = False                 # whole-world revoke in effect
+        self._shrink_calls = [0] * size       # per-rank shrink generation
+        self._shrinks: Dict[int, dict] = {}   # generation -> rank -> handle
+        self._fault_hook: Optional[Callable] = None   # FaultInjector tap
 
     def _key(self, src: int, dst: int, tag: Any) -> Tuple[int, int, Any]:
         return (src, dst, tag)
+
+    def _failed_op(self, handle: EventHandle, src: int,
+                   dst: int) -> EventHandle:
+        """Fail a fresh handle for an op that can never complete."""
+        if self._revoked:
+            handle.fail(CommRevokedError())
+        else:
+            if src in self._failed:
+                dead: Optional[int] = src
+            elif dst in self._failed:
+                dead = dst
+            else:
+                dead = next(iter(self._failed), None)
+            handle.fail(RankFailedError(dead))
+        return handle
 
     def isend(self, payload: Any, *, src: int, dst: int, tag: Any = 0,
               synchronous: bool = False) -> _SendHandle:
         if not (0 <= src < self.size and 0 <= dst < self.size):
             raise ValueError(f"rank out of range: {src}->{dst}")
+        hook = self._fault_hook
+        if hook is not None:
+            hook("isend", src, dst, tag)
+        if self._revoked or src in self._failed or dst in self._failed:
+            # ULFM: an op naming a dead peer (or posted on a revoked
+            # communicator) completes erroneously instead of matching.
+            return self._failed_op(_SendHandle(payload, True), src, dst)
         h = _SendHandle(payload, synchronous)
         key = self._key(src, dst, tag)
         matched = None
@@ -269,6 +367,11 @@ class CommWorld:
         return h
 
     def irecv(self, *, src: int, dst: int, tag: Any = 0) -> _RecvHandle:
+        hook = self._fault_hook
+        if hook is not None:
+            hook("irecv", src, dst, tag)
+        if self._revoked or src in self._failed or dst in self._failed:
+            return self._failed_op(_RecvHandle(), src, dst)
         key = self._key(src, dst, tag)
         r = _RecvHandle()
         matched = None
@@ -334,6 +437,10 @@ class CommWorld:
         if not 0 <= rank < self.size:
             raise ValueError(f"rank {rank} out of range for size {self.size}")
         handle = GroupHandle()
+        if self._revoked or self._failed:
+            # A split needs every world rank; with a dead member it can
+            # never complete — fail fast (survivors shrink() instead).
+            return self._failed_op(handle, rank, rank)
         ready = None
         with self._lock:
             gen = self._split_calls[rank]
@@ -371,18 +478,23 @@ class CommWorld:
                          dims, periodic)
 
     def dist_graph_create(
-            self, adjacency: Sequence[Sequence[int]]) -> "DistGraphGroup":
+            self, adjacency: Sequence[Sequence[int]],
+            directed: bool = False) -> "DistGraphGroup":
         """Distributed-graph sub-communicator over the first
         ``len(adjacency)`` ranks (the ``MPI_Dist_graph_create_adjacent``
         analogue for unstructured meshes).
 
         ``adjacency[r]`` lists rank ``r``'s neighbours (group-local
         numbering).  Like :meth:`cart_create` the construction is
-        central: build once, share the group.  The adjacency must be
-        symmetric (every edge declared by both endpoints — the
+        central: build once, share the group.  By default the adjacency
+        must be symmetric (every edge declared by both endpoints — the
         ``sources == destinations`` case of the MPI call, which is what
         an unstructured-mesh halo exchange needs) and self-loop-free.
-        The group's :meth:`DistGraphGroup.topology` feeds
+        With ``directed=True``, ``adjacency[r]`` lists rank ``r``'s
+        *out*-neighbours (its destinations) and edges may be one-way —
+        the general ``MPI_Dist_graph_create_adjacent`` case; in-neighbour
+        lists are derived (:meth:`DistGraphGroup.in_neighbor_dirs`).  The
+        group's :meth:`DistGraphGroup.topology` feeds
         :func:`repro.core.schedule.build_neighbor` exactly like a
         Cartesian grid's, so :class:`~repro.core.collectives.HaloExchange`
         and ``Collectives.neighbor_alltoall`` work unchanged over it.
@@ -392,7 +504,173 @@ class CommWorld:
             raise ValueError(f"graph with {n} ranks exceeds world size "
                              f"{self.size}")
         return DistGraphGroup(self, range(n),
-                              ("graph", next(self._group_seq)), adjacency)
+                              ("graph", next(self._group_seq)), adjacency,
+                              directed=directed)
+
+    # -- ULFM failure detection, revoke, and shrink -------------------------
+    @property
+    def failed(self) -> frozenset:
+        """The dead world ranks (MPI_Comm_failure_ack / get_failed)."""
+        with self._lock:
+            return frozenset(self._failed)
+
+    @property
+    def alive(self) -> Tuple[int, ...]:
+        """The surviving world ranks, ascending."""
+        with self._lock:
+            return tuple(r for r in range(self.size)
+                         if r not in self._failed)
+
+    @property
+    def revoked(self) -> bool:
+        return self._revoked
+
+    def fail_rank(self, rank: int) -> None:
+        """Kill ``rank``: the failure-detection entry point.
+
+        Every *pending* send/recv naming the dead rank completes
+        erroneously with :class:`RankFailedError` — pushed through the
+        handles' completion callbacks, so both notification backends
+        observe the failure with zero new polling.  Every *future* op
+        naming it fails at post time.  Pending ``split`` generations can
+        never complete (they need all ranks) and are failed too.  The
+        communicator epoch is bumped, invalidating epoch-keyed compiled
+        plans (:func:`repro.core.program.epoch_of`).  Idempotent.
+        """
+        if not 0 <= rank < self.size:
+            raise ValueError(f"rank {rank} out of range for size {self.size}")
+        to_fail: List[EventHandle] = []
+        with self._lock:
+            if rank in self._failed:
+                return
+            self._failed.add(rank)
+            self.epoch += 1
+            for store in (self._msgs, self._recvs):
+                for key in [k for k in store if rank in k[:2]]:
+                    to_fail.extend(store.pop(key))
+            split_handles = [h for entry in self._splits.values()
+                             for (_c, _k, h) in entry.values()]
+            self._splits.clear()
+            ready = self._shrink_ready_locked()
+        # Fail OUTSIDE the lock: failing completes the handles, and a
+        # completion callback may post messages (which need the lock).
+        exc = RankFailedError(rank)
+        for h in to_fail:
+            h.fail(exc)
+        for h in split_handles:
+            h.fail(exc)
+        # A shrink agreement pending on only this rank's vote is now
+        # decided: the dead rank no longer gets a say.
+        self._complete_shrinks(ready)
+
+    def revoke(self) -> None:
+        """Revoke the communicator (MPI_Comm_revoke).
+
+        Any survivor that observes a :class:`RankFailedError` calls this
+        to propagate the failure: every pending operation — whoever it
+        names — completes erroneously with :class:`CommRevokedError`, and
+        new operations fail at post time, so no peer can stay parked on a
+        handle whose partner aborted.  The revocation stays in effect
+        until a :meth:`shrink` agreement completes.  Idempotent per
+        revocation window.
+        """
+        with self._lock:
+            if self._revoked:
+                return
+            self._revoked = True
+            self.epoch += 1
+            to_fail = [h for hs in self._msgs.values() for h in hs]
+            to_fail += [h for hs in self._recvs.values() for h in hs]
+            self._msgs.clear()
+            self._recvs.clear()
+            split_handles = [h for entry in self._splits.values()
+                             for (_c, _k, h) in entry.values()]
+            self._splits.clear()
+        exc = CommRevokedError()
+        for h in to_fail:
+            h.fail(exc)
+        for h in split_handles:
+            h.fail(exc)
+
+    def revoke_group(self, gid: Any) -> None:
+        """Revoke one sub-communicator's traffic only (its tag space)."""
+        def is_group_tag(tag: Any) -> bool:
+            return (isinstance(tag, tuple) and len(tag) == 3
+                    and tag[0] == "grp" and tag[1] == gid)
+        with self._lock:
+            self.epoch += 1
+            to_fail = []
+            for store in (self._msgs, self._recvs):
+                for key in [k for k in store if is_group_tag(k[2])]:
+                    to_fail.extend(store.pop(key))
+        exc = CommRevokedError(message=f"communicator {gid!r} revoked")
+        for h in to_fail:
+            h.fail(exc)
+
+    def shrink(self, *, rank: int) -> GroupHandle:
+        """ULFM MPI_Comm_shrink: survivors agree on a shrunken communicator.
+
+        A collective agreement among the *live* ranks (same generation
+        counting as :meth:`split`): the returned handle completes once
+        every survivor of this generation has called, with a
+        :class:`CommGroup` over the survivors (ascending world-rank
+        order, dense group-local numbering) as its result — all callers
+        of one generation share the same group object, so compiled-plan
+        caches are shared too.  Completing the agreement ends any active
+        :meth:`revoke` window.  A caller that is itself dead — or dies
+        mid-agreement — gets its handle failed instead; the agreement
+        then completes without its vote (``fail_rank`` re-checks pending
+        generations).  The handle is task-aware like ``split``'s.
+        """
+        if not 0 <= rank < self.size:
+            raise ValueError(f"rank {rank} out of range for size {self.size}")
+        handle = GroupHandle()
+        with self._lock:
+            if rank in self._failed:
+                dead_caller = True
+                ready: List[tuple] = []
+            else:
+                dead_caller = False
+                gen = self._shrink_calls[rank]
+                self._shrink_calls[rank] += 1
+                self._shrinks.setdefault(gen, {})[rank] = handle
+                ready = self._shrink_ready_locked()
+        if dead_caller:
+            handle.fail(RankFailedError(rank))
+            return handle
+        self._complete_shrinks(ready)
+        return handle
+
+    def _shrink_ready_locked(self) -> List[tuple]:
+        """Pop the shrink generations whose surviving voters all arrived.
+
+        Caller holds ``_lock``.  Returns ``(gen, votes, survivors,
+        epoch)`` records for :meth:`_complete_shrinks` to finish outside
+        the lock.
+        """
+        survivors = tuple(r for r in range(self.size)
+                          if r not in self._failed)
+        ready = []
+        for gen in sorted(self._shrinks):
+            entry = self._shrinks[gen]
+            if all(r in entry for r in survivors):
+                ready.append((gen, self._shrinks.pop(gen), survivors,
+                              self.epoch))
+        return ready
+
+    def _complete_shrinks(self, ready: List[tuple]) -> None:
+        for gen, entry, survivors, epoch in ready:
+            group = CommGroup(self, survivors, ("shrink", epoch, gen))
+            with self._lock:
+                # The agreement is the recovery point: survivors hold a
+                # working communicator again, so the revocation window
+                # closes before any completion callback can observe it.
+                self._revoked = False
+            for r, h in entry.items():
+                if r in self._failed:
+                    h.fail(RankFailedError(r))
+                else:
+                    h.complete(group)
 
 
 class GroupHandle(EventHandle):
@@ -457,6 +735,54 @@ class CommGroup:
                        other: "CommGroup") -> List[Optional[int]]:
         """MPI_Group_translate_ranks: batch :meth:`translate`."""
         return [self.translate(r, other) for r in ranks]
+
+    # -- failure model (delegated to the parent world) ----------------------
+    @property
+    def epoch(self) -> int:
+        """The parent world's communicator epoch (conservative: any
+        failure/revoke anywhere invalidates this group's compiled plans
+        too — see :func:`repro.core.program.epoch_of`)."""
+        return self.world.epoch
+
+    @property
+    def failed(self) -> frozenset:
+        """The dead *group-local* ranks of this group."""
+        return frozenset(gr for gr, wr in enumerate(self.ranks)
+                         if wr in self.world.failed)
+
+    def revoke(self) -> None:
+        """Revoke this sub-communicator only (its tag space): pending
+        group traffic fails with :class:`CommRevokedError`; the world and
+        sibling groups are untouched."""
+        self.world.revoke_group(self.gid)
+
+    # -- rebuild helpers (the recovery path) --------------------------------
+    def cart(self, dims: Sequence[int], periodic: Any = False) -> "CartGroup":
+        """Re-shape this group's members as a Cartesian topology.
+
+        The recovery step after :meth:`CommWorld.shrink`: the shrunken
+        group's dense ranks get grid coordinates again so persistent
+        neighbourhood schedules can be rebuilt.  A fresh context id is
+        minted — old in-flight tags can never match the new topology.
+        """
+        n = math.prod(int(d) for d in dims)
+        if n != self.size:
+            raise ValueError(f"cartesian grid {tuple(dims)} needs {n} "
+                             f"ranks, group has {self.size}")
+        return CartGroup(self.world, self.ranks,
+                         ("cart", next(self.world._group_seq)),
+                         dims, periodic)
+
+    def graph(self, adjacency: Sequence[Sequence[int]],
+              directed: bool = False) -> "DistGraphGroup":
+        """Re-shape this group's members as a distributed graph (the
+        unstructured-mesh sibling of :meth:`cart`)."""
+        if len(adjacency) != self.size:
+            raise ValueError(f"graph with {len(adjacency)} ranks does not "
+                             f"cover group size {self.size}")
+        return DistGraphGroup(self.world, self.ranks,
+                              ("graph", next(self.world._group_seq)),
+                              adjacency, directed=directed)
 
     # -- point-to-point (group-local ranks, namespaced tags) ----------------
     def _check(self, rank: int) -> None:
@@ -600,18 +926,30 @@ class DistGraphGroup(_NeighborTopology, CommGroup):
     """Unstructured-graph process topology (MPI_Dist_graph_create_adjacent).
 
     The non-Cartesian sibling of :class:`CartGroup`: neighbour lists come
-    from an explicit symmetric adjacency instead of grid coordinates.  A
-    neighbour *direction* is ``((lo, hi), ±1)`` — the undirected edge's
-    endpoint pair plus which way along it this rank sends (``+1`` from
-    the lower-ranked endpoint) — so reciprocity holds exactly as on a
-    grid: rank ``r``'s direction ``d`` toward ``q`` is matched by ``q``'s
-    direction ``(d[0], -d[1])`` toward ``r``, which is what
-    :func:`repro.core.schedule.build_neighbor` requires of a topology.
+    from an explicit adjacency instead of grid coordinates.  In the
+    symmetric (default) case a neighbour *direction* is ``((lo, hi), ±1)``
+    — the undirected edge's endpoint pair plus which way along it this
+    rank sends (``+1`` from the lower-ranked endpoint) — so reciprocity
+    holds exactly as on a grid: rank ``r``'s direction ``d`` toward ``q``
+    is matched by ``q``'s direction ``(d[0], -d[1])`` toward ``r``, which
+    is what :func:`repro.core.schedule.build_neighbor` requires of a
+    topology.
+
+    With ``directed=True`` the adjacency lists *out*-neighbours and edges
+    may be one-way: the edge ``u → v`` is the send direction
+    ``((u, v), +1)`` at ``u`` and the receive direction ``((u, v), -1)``
+    at ``v`` (:meth:`in_neighbor_dirs`).  A graph declaring both
+    ``u → v`` and ``v → u`` therefore carries two independent one-way
+    edges with distinct direction labels.  :meth:`in_topology` hands the
+    per-rank receive-direction lists to ``build_neighbor`` so asymmetric
+    exchanges validate and schedule correctly.
     """
 
     def __init__(self, world: CommWorld, ranks: Sequence[int], gid: Any,
-                 adjacency: Sequence[Sequence[int]]) -> None:
+                 adjacency: Sequence[Sequence[int]],
+                 directed: bool = False) -> None:
         super().__init__(world, ranks, gid)
+        self.directed = bool(directed)
         adj = []
         for r, nbrs in enumerate(adjacency):
             nbrs = sorted({int(q) for q in nbrs})
@@ -623,24 +961,65 @@ class DistGraphGroup(_NeighborTopology, CommGroup):
                     raise ValueError(f"rank {r}: self-loop in adjacency")
             adj.append(tuple(nbrs))
         self.adjacency = tuple(adj)
-        for r, nbrs in enumerate(self.adjacency):
-            for q in nbrs:
-                if r not in self.adjacency[q]:
-                    raise ValueError(
-                        f"asymmetric adjacency: {r} lists {q} but {q} "
-                        f"does not list {r} (every edge must be declared "
-                        f"by both endpoints)")
+        if self.directed:
+            in_adj: List[List[int]] = [[] for _ in range(self.size)]
+            for r, nbrs in enumerate(self.adjacency):
+                for q in nbrs:
+                    in_adj[q].append(r)
+            self.in_adjacency = tuple(tuple(sorted(s)) for s in in_adj)
+        else:
+            for r, nbrs in enumerate(self.adjacency):
+                for q in nbrs:
+                    if r not in self.adjacency[q]:
+                        raise ValueError(
+                            f"asymmetric adjacency: {r} lists {q} but {q} "
+                            f"does not list {r} (every edge must be "
+                            f"declared by both endpoints; pass "
+                            f"directed=True for one-way edges)")
+            self.in_adjacency = self.adjacency
 
     def neighbor_dirs(self, rank: int) -> List[Tuple[Tuple[Any, int], int]]:
-        """Persistent neighbour list ``[(((lo, hi), ±1), neighbour)]`` in
-        ascending-neighbour order (deterministic, like the grid's)."""
+        """Persistent *send* neighbour list in ascending-neighbour order
+        (deterministic, like the grid's): ``[(((lo, hi), ±1), neighbour)]``
+        for a symmetric graph, ``[(((rank, q), +1), q)]`` for a directed
+        one."""
         self._check(rank)
+        if self.directed:
+            return [(((rank, q), 1), q) for q in self.adjacency[rank]]
         return [(((min(rank, q), max(rank, q)), 1 if rank < q else -1), q)
                 for q in self.adjacency[rank]]
 
+    def in_neighbor_dirs(
+            self, rank: int) -> List[Tuple[Tuple[Any, int], int]]:
+        """Persistent *receive* neighbour list ``[(direction, source)]``.
+
+        For a symmetric graph this equals :meth:`neighbor_dirs` (every
+        receive direction is also a send direction); for a directed graph
+        it lists the in-edges ``(((q, rank), -1), q)``.
+        """
+        self._check(rank)
+        if not self.directed:
+            return self.neighbor_dirs(rank)
+        return [(((q, rank), -1), q) for q in self.in_adjacency[rank]]
+
+    def in_topology(self):
+        """Per-rank receive-direction lists for
+        :func:`repro.core.schedule.build_neighbor`'s ``in_topology``
+        argument — ``None`` for a symmetric graph (receives mirror
+        sends), a hashable tuple-of-tuples of direction labels for a
+        directed one."""
+        if not self.directed:
+            return None
+        return tuple(tuple(d for d, _ in self.in_neighbor_dirs(r))
+                     for r in range(self.size))
+
     def neighbors(self, rank: int) -> List[int]:
-        """Neighbour group ranks in ``neighbor_dirs`` order."""
+        """Out-neighbour group ranks in ``neighbor_dirs`` order."""
         return [nbr for _, nbr in self.neighbor_dirs(rank)]
+
+    def in_neighbors(self, rank: int) -> List[int]:
+        """In-neighbour group ranks in ``in_neighbor_dirs`` order."""
+        return [nbr for _, nbr in self.in_neighbor_dirs(rank)]
 
 
 # ---------------------------------------------------------------------------

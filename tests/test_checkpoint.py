@@ -1,0 +1,184 @@
+"""Checkpoint subsystem: mesh-agnostic format, async saves, elastic
+restore after an injected failure.
+
+Complements test_system.py's training-loop checkpoint tests with direct
+unit coverage of repro.checkpoint: the manifest round-trip across
+meshes (4×2 → 2×4, the elastic-worlds prerequisite), ``latest_step``
+selection, the AsyncCheckpointer's dependency-release semantics (saves
+serialise through the inout region; ``wait_all`` is a taskwait), and
+restore-after-injected-rank-death driving the benchmarks' recovery
+loop.  Device-count-dependent tests run in subprocesses like
+test_distributed.py (jax locks the device count at first init).
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core import tac
+
+_ENV = dict(os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run(code: str) -> str:
+    r = subprocess.run([sys.executable, "-c", code], env=_ENV,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_save_restore_round_trip_host_arrays(tmp_path):
+    state = {"w": np.arange(12.0).reshape(3, 4),
+             "opt": {"m": np.ones(5), "step": np.int64(3)}}
+    d = str(tmp_path / "ck")
+    path = ckpt.save_checkpoint(d, state, step=4)
+    assert os.path.isdir(path)
+    restored, step = ckpt.restore_checkpoint(
+        d, {"w": np.empty((3, 4)), "opt": {"m": np.empty(5),
+                                           "step": np.int64(0)}})
+    assert step == 4
+    np.testing.assert_array_equal(restored["w"], state["w"])
+    np.testing.assert_array_equal(restored["opt"]["m"], state["opt"]["m"])
+    assert int(restored["opt"]["step"]) == 3
+
+
+def test_latest_step_and_explicit_step(tmp_path):
+    d = str(tmp_path / "ck")
+    assert ckpt.latest_step(d) is None
+    for s in (1, 5, 3):
+        ckpt.save_checkpoint(d, {"x": np.full(2, float(s))}, step=s)
+    assert ckpt.latest_step(d) == 5
+    r5, s5 = ckpt.restore_checkpoint(d, {"x": np.empty(2)})
+    assert s5 == 5 and r5["x"][0] == 5.0
+    r3, s3 = ckpt.restore_checkpoint(d, {"x": np.empty(2)}, step=3)
+    assert s3 == 3 and r3["x"][0] == 3.0
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_checkpoint(str(tmp_path / "nope"), {"x": np.empty(2)})
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save_checkpoint(d, {"x": np.zeros((2, 2))}, step=0)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore_checkpoint(d, {"x": np.empty(3)})
+
+
+@pytest.mark.slow
+def test_mesh_agnostic_round_trip_4x2_to_2x4():
+    """A sharded train state saved on a (4,2) mesh restores bitwise onto
+    a (2,4) mesh — the gather-full/reshard-on-read format."""
+    _run("""
+import jax, numpy as np, tempfile
+from repro import configs, optim
+from repro.runtime import steps
+from repro.runtime.sharding import ShardingPolicy
+from repro.launch.mesh import make_mesh
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+cfg = configs.smoke("granite_3_2b").scaled(dtype="float32")
+state = steps.init_train_state(cfg, optim.OptimConfig(),
+                               jax.random.PRNGKey(1))
+pol = ShardingPolicy()
+mesh_a, mesh_b = make_mesh((4, 2), ("data", "model")), \
+                 make_mesh((2, 4), ("data", "model"))
+sa = steps.state_shardings(mesh_a, jax.eval_shape(lambda: state), pol)
+state_a = jax.device_put(state, sa)
+d = tempfile.mkdtemp()
+save_checkpoint(d, state_a, step=11)
+assert latest_step(d) == 11
+sb = steps.state_shardings(mesh_b, jax.eval_shape(lambda: state), pol)
+restored, step = restore_checkpoint(d, jax.eval_shape(lambda: state), sb)
+assert step == 11
+for a, b in zip(jax.tree_util.tree_leaves(jax.device_get(state_a)),
+                jax.tree_util.tree_leaves(jax.device_get(restored))):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("MESH-AGNOSTIC-OK")
+""")
+
+
+def test_async_save_dependency_release(tmp_path):
+    """AsyncCheckpointer.save returns immediately; the EventHandle
+    completes when the writer task releases the checkpoint-dir region;
+    consecutive saves serialise through it (steps publish in order)."""
+    d = str(tmp_path / "ck")
+    cp = ckpt.AsyncCheckpointer(d, keep=2)
+    gate = threading.Event()
+    orig_write = ckpt._write
+    published = []
+
+    def slow_write(base, host_state, step):
+        gate.wait(timeout=30)           # hold the first save open
+        path = orig_write(base, host_state, step)
+        published.append(step)
+        return path
+
+    ckpt._write = slow_write
+    try:
+        h1 = cp.save({"x": np.zeros(4)}, step=1)
+        h2 = cp.save({"x": np.ones(4)}, step=2)
+        assert not h1.test() and not h2.test()   # save() did not block
+        gate.set()
+        assert h1.wait().endswith("step_0000000001")
+        assert h2.wait().endswith("step_0000000002")
+        assert published == [1, 2]      # inout region serialised them
+    finally:
+        ckpt._write = orig_write
+        cp.close()
+    assert cp.runtime.polling.num_services == 0
+
+
+def test_async_save_gc_keeps_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    cp = ckpt.AsyncCheckpointer(d, keep=2)
+    for s in range(1, 5):
+        cp.save({"x": np.full(3, float(s))}, step=s)
+    cp.close()
+    assert ckpt.latest_step(d) == 4
+    kept = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                  if n.startswith("step_"))
+    assert kept == [3, 4]
+
+
+@pytest.mark.faults
+def test_restore_after_injected_failure(tmp_path):
+    """The benchmark recovery loop in miniature: checkpoint per step, a
+    FaultInjector kills a rank mid-collective, survivors shrink and the
+    resumed state comes from the LAST COMPLETED step, not the torn one."""
+    from repro.core import Collectives
+    from repro.core.resilience import FaultInjector, recover
+
+    d = str(tmp_path / "ck")
+    tac.init(tac.TASK_MULTIPLE)
+    world = tac.CommWorld(4)
+    coll = Collectives(world)
+    inj = FaultInjector(world)
+    state = np.arange(8.0)
+    ckpt.save_checkpoint(d, {"state": state}, step=0)
+
+    def step_all(coll, state, n, key):
+        out = coll.run_group(
+            "allreduce", [{"value": state / n} for _ in range(n)],
+            key=key)
+        return np.asarray(out[0])
+
+    state = step_all(coll, state, 4, "s1")
+    ckpt.save_checkpoint(d, {"state": state}, step=1)
+    inj.arm(2, after_ops=1)
+    with pytest.raises(tac.RankFailedError):
+        step_all(coll, state, 4, "s2")        # torn step: never published
+    assert ckpt.latest_step(d) == 1           # no partial checkpoint
+    g = recover(world)
+    restored, step = ckpt.restore_checkpoint(d, {"state": np.empty(8)})
+    assert step == 1
+    np.testing.assert_array_equal(restored["state"], state)
+    # survivors continue from the restored state on the shrunken group
+    final = step_all(Collectives(g), restored["state"], 3, "s2r")
+    np.testing.assert_allclose(final, restored["state"], rtol=1e-12)

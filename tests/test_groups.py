@@ -613,3 +613,110 @@ def test_gauss_seidel_halo_event_beats_sentinel():
         ev = simulate_version("interop-nonblk", **kw)
         sn = simulate_version("sentinel", **kw)
         assert ev < sn, (n, ev, sn)
+
+
+# ---------------------------------------------------------------------------
+# directed (asymmetric) dist-graph topologies: one-way edges
+# ---------------------------------------------------------------------------
+# a 4-rank directed graph with one-way edges: 0->1, 0->2, 1->3, 2->3, 3->0
+# (a diamond with a back edge; rank 0 has out-degree 2 and in-degree 1)
+DIRECTED = [(1, 2), (3,), (3,), (0,)]
+
+
+def test_directed_dist_graph_structure():
+    w = tac.CommWorld(4)
+    g = w.dist_graph_create(DIRECTED, directed=True)
+    assert g.directed
+    assert g.neighbors(0) == [1, 2] and g.in_neighbors(0) == [3]
+    assert g.neighbors(3) == [0] and g.in_neighbors(3) == [1, 2]
+    # edge u->v is send-dir ((u, v), +1) at u, recv-dir ((u, v), -1) at v
+    assert g.neighbor_dirs(0) == [(((0, 1), 1), 1), (((0, 2), 1), 2)]
+    assert g.in_neighbor_dirs(3) == [(((1, 3), -1), 1), (((2, 3), -1), 2)]
+    # the symmetric ctor still rejects the same adjacency
+    with pytest.raises(ValueError, match="directed=True"):
+        w.dist_graph_create(DIRECTED)
+
+
+def test_directed_dist_graph_double_edges_are_independent():
+    """u->v and v->u declared together are two one-way edges with
+    distinct direction labels, not one undirected edge."""
+    w = tac.CommWorld(2)
+    g = w.dist_graph_create([(1,), (0,)], directed=True)
+    assert g.neighbor_dirs(0) == [(((0, 1), 1), 1)]
+    assert g.neighbor_dirs(1) == [(((1, 0), 1), 0)]
+    assert g.in_neighbor_dirs(0) == [(((1, 0), -1), 1)]
+    assert g.in_neighbor_dirs(1) == [(((0, 1), -1), 0)]
+
+
+def test_directed_group_translation_one_way_edges():
+    """Group-local adjacency over non-contiguous world ranks: the edge
+    endpoints name *group* ranks; payloads travel between the right
+    world ranks (translation) and only along declared edges."""
+    w = tac.CommWorld(6)
+    grp = w.group([5, 1, 4, 2])        # group rank i -> world rank
+    g = grp.graph(DIRECTED, directed=True)
+    assert g.ranks == (5, 1, 4, 2)
+    # group rank 0 (world 5) sends one-way to group rank 1 (world 1)
+    h = g.isend(np.float64(7.0), src=0, dst=1, tag="edge")
+    assert g.irecv(src=0, dst=1, tag="edge").result == 7.0
+    assert h.test()
+    # translation across sibling groups still works on the graph group
+    other = w.group([4, 5])
+    assert g.translate(2, other) == 0   # world 4
+    assert g.translate(3, other) is None
+
+
+def test_directed_build_neighbor_validates_in_topology():
+    from repro.core import schedule as schedule_ir
+    w = tac.CommWorld(4)
+    g = w.dist_graph_create(DIRECTED, directed=True)
+    sched = schedule_ir.build_neighbor(g.topology(), g.in_topology())
+    assert sched.n == 4
+    assert sched.in_dirs[3] == (((1, 3), -1), ((2, 3), -1))
+    assert sched.out_dirs[3] == (((3, 0), 1),)
+    # a wrong declaration is rejected against the derived arrivals
+    bad = list(g.in_topology())
+    bad[0] = ()
+    with pytest.raises(ValueError, match="declared in-directions"):
+        schedule_ir.build_neighbor(g.topology(), tuple(bad))
+
+
+def test_directed_halo_exchange_run_group():
+    """One-way exchange end to end: every rank receives exactly its
+    in-edges' payloads, keyed by the receive direction."""
+    w = tac.CommWorld(4)
+    g = w.dist_graph_create(DIRECTED, directed=True)
+    hx = HaloExchange(g)
+    sends = [{d: np.float64(100 * r + q) for d, q in g.neighbor_dirs(r)}
+             for r in range(4)]
+    out = hx.run_group(sends)
+    for r in range(4):
+        assert set(out[r]) == {d for d, _ in g.in_neighbor_dirs(r)}
+        for d, q in g.in_neighbor_dirs(r):
+            # in-dir ((q, r), -1) was fed by q's send-dir ((q, r), +1)
+            np.testing.assert_array_equal(out[r][d], sends[q][(d[0], 1)])
+
+
+def test_directed_neighbor_alltoall_event_mode_on_runtime():
+    w = tac.CommWorld(4)
+    g = w.dist_graph_create(DIRECTED, directed=True)
+    coll = Collectives(g)
+    got = {}
+
+    def comm(r):
+        def body():
+            sends = {d: np.float64(10 * r + q)
+                     for d, q in g.neighbor_dirs(r)}
+            got[r] = coll.neighbor_alltoall(sends, rank=r, mode="event",
+                                            key="d")
+        return body
+
+    with TaskRuntime(num_workers=2) as rt:
+        for r in range(4):
+            rt.submit(comm(r))
+        rt.taskwait()
+    for r in range(4):
+        res = got[r].result
+        assert set(res) == {d for d, _ in g.in_neighbor_dirs(r)}
+        for d, q in g.in_neighbor_dirs(r):
+            assert float(res[d]) == 10 * q + r

@@ -95,12 +95,21 @@ def gs_block(block, top, left, bottom, right):
 # ---------------------------------------------------------------------------
 def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
              nby: int = 2, nbx: int = 2, bs: int = 16, iters: int = 3,
-             seed: int = 0, notify: str = None):
+             seed: int = 0, notify: str = None, block_impl: str = None):
     """Returns (final grid, stats).
 
     ``notify`` picks the runtime's completion-notification backend
     ("polling" / "continuation"; None = the REPRO_NOTIFY env default) —
     the end-to-end parity legs run the same benchmark under both.
+
+    ``block_impl`` routes the per-block stage through the fused stencil
+    kernel (:func:`repro.kernels.ops.gs_stencil`;
+    "ref"/"pallas_interpret"/"pallas"): ONE pass over the block produces
+    the interior update, the rank-local residual contribution AND the
+    four packed boundary edges — the halo payloads and residual sums are
+    then read from the per-block caches instead of re-slicing and
+    re-reading the grids (the unfused path's extra passes).  The kernel
+    computes in fp32; ``None`` keeps the float64 numpy path bit-exact.
 
     Dataflow: grids[it][gy][gx]; block (gy,gx) at iteration it reads
     up/left from iteration it when the neighbour block is on the SAME
@@ -108,6 +117,9 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
     cross-rank side reads the neighbour rank's it-1 boundary, delivered
     by that iteration's halo exchange.
     """
+    if block_impl is not None:
+        import jax.numpy as jnp
+        from repro.kernels import ops as kernel_ops
     py, px = grid_dims(n_ranks)
     NYb, NXb = py * nby, px * nbx
     rng = np.random.default_rng(seed)
@@ -128,6 +140,8 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
     residual_coll = hier.persistent(op="sum")
     halos: Dict = {}       # (rank, it) -> {direction: edge} | handle
     residuals: Dict = {}   # (rank, it) -> float | CollectiveHandle
+    res_cache: Dict = {}   # (gy, gx, it) -> fused per-block residual
+    edge_cache: Dict = {}  # (gy, gx, it) -> (top, bottom, left, right)
     tac.init(tac.TASK_MULTIPLE if version.startswith("interop")
              else tac.THREAD_MULTIPLE)
     rt = TaskRuntime(num_workers=workers, notify=notify)
@@ -136,17 +150,34 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
     def rank_of(gy, gx):
         return cart.rank_at((gy // nby, gx // nbx))
 
+    def packed_edge(gy, gx, it, d):
+        """A boundary edge from the fused kernel's boundary-pack output."""
+        te, be, le, re = edge_cache[(gy, gx, it)]
+        dim, disp = d
+        if dim == 0:
+            return te if disp < 0 else be
+        return le if disp < 0 else re
+
     def halo_sends(r, it):
         """Outgoing it-1 boundary edges, one concatenated array per
-        neighbour direction."""
+        neighbour direction.  On the fused path the edges come packed
+        from the stencil kernel's boundary outputs (no grid re-slice);
+        iteration 0 has no kernel pass, so its edges slice the initial
+        grid as usual."""
         out = {}
         for d, _ in hx.neighbors(r):
+            cells = edge_blocks(cart, nby, nbx, r, d)
+            if block_impl is not None and \
+                    (cells[0] + (it - 1,)) in edge_cache:
+                out[d] = np.concatenate(
+                    [packed_edge(gy, gx, it - 1, d) for gy, gx in cells])
+                continue
             dim, disp = d
             edge = 0 if disp < 0 else -1
             out[d] = np.concatenate(
                 [grids[it - 1][gy][gx][edge, :].copy() if dim == 0
                  else grids[it - 1][gy][gx][:, edge].copy()
-                 for gy, gx in edge_blocks(cart, nby, nbx, r, d)])
+                 for gy, gx in cells])
         return out
 
     def boundary_blocks(r):
@@ -190,8 +221,19 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
             right = halo_edge(r, it, (1, 1), gy - ry * nby)
         else:
             right = g_prev[gy][gx + 1][:, 0]
-        grids[it][gy][gx] = gs_block(g_prev[gy][gx], top, left, bottom,
-                                     right)
+        if block_impl is None:
+            grids[it][gy][gx] = gs_block(g_prev[gy][gx], top, left,
+                                         bottom, right)
+            return
+        new, res, edges = kernel_ops.gs_stencil(
+            jnp.asarray(g_prev[gy][gx], jnp.float32),
+            jnp.asarray(top, jnp.float32), jnp.asarray(left, jnp.float32),
+            jnp.asarray(bottom, jnp.float32),
+            jnp.asarray(right, jnp.float32), impl=block_impl)
+        grids[it][gy][gx] = np.asarray(new, np.float64)
+        res_cache[(gy, gx, it)] = float(res)
+        edge_cache[(gy, gx, it)] = tuple(np.asarray(e, np.float64)
+                                         for e in edges)
 
     def block_deps(gy, gx, it):
         """Region deps for the compute task (task versions only)."""
@@ -227,8 +269,13 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
         tot = 0.0
         for gy in range(ry * nby, (ry + 1) * nby):
             for gx in range(rx * nbx, (rx + 1) * nbx):
-                tot += float(np.abs(grids[it][gy][gx]
-                                    - grids[it - 1][gy][gx]).sum())
+                if block_impl is not None:
+                    # fused path: the kernel already produced the
+                    # per-block |new - old| sum — no grid re-read.
+                    tot += res_cache[(gy, gx, it)]
+                else:
+                    tot += float(np.abs(grids[it][gy][gx]
+                                        - grids[it - 1][gy][gx]).sum())
         return np.float64(tot)
 
     for it in range(1, iters + 1):
@@ -722,6 +769,21 @@ def bench(print_fn=print, smoke: bool = False):
             dt = (time.monotonic() - t0) / 3
             assert float(np.abs(out - ref).max()) < 1e-10, (v, nb)
             rows.append((f"gs_e2e_{v}_{nb}", dt * 1e6, "notify-leg"))
+
+    # fused-stencil leg (Pallas executor tier): interior update, residual
+    # and boundary-pack in ONE kernel pass per block — halo payloads and
+    # residual sums come from the kernel outputs, not grid re-reads.  The
+    # kernel computes in fp32, so the bound is fp32 epsilon (~1e-5 after
+    # 3 iterations), not the float64 paths' 1e-10.
+    t0 = time.monotonic()
+    out_f, st_f = run_real("interop-nonblk", block_impl="pallas_interpret")
+    dt = (time.monotonic() - t0) / 3
+    err_f = float(np.abs(out_f - ref).max())
+    assert err_f < 1e-4, err_f
+    for it, val in ref_stats["residuals"].items():
+        assert abs(st_f["residuals"][it] - val) <= 1e-4 * max(1.0, val), it
+    rows.append(("gs_fused_stencil_interop", dt * 1e6,
+                 f"maxerr={err_f:.1e}"))
 
     if smoke:
         # CI bench-smoke job: all five versions numerically agree (above)

@@ -62,8 +62,11 @@ import pathlib
 import time
 
 import jax
+import jax.numpy as jnp
+from jax import lax
 
 from repro import configs, optim
+from repro.kernels import ops as kernel_ops
 from repro.core import lowering
 from repro.core import schedule as schedule_ir
 from repro.core import simulate, tac
@@ -217,6 +220,222 @@ def bench_hierarchical(reps: int, elems: int) -> dict:
                                               gamma=GAMMA)
             entry["features"] = features(sched, nbytes)
         report[name] = entry
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Fused-stage microbench: the Pallas executor tier vs unfused elementwise
+# ---------------------------------------------------------------------------
+# Analytic HBM traffic of one reduce-scatter combine stage, bytes per
+# element: the fused kernel reads the wire payload and the fp32
+# accumulator and writes the result ONCE; the unfused path additionally
+# materialises the fp32 copy of the cast/dequantised wire payload (one
+# write + one read-back).  fp32 has no cast stage, so fused == unfused
+# there — the ≤0.6× bytes claim is about the narrow-wire legs.
+_ACC_B = 4
+_WIRE_B = {"fp32": 4, "bf16": 2, "int8": 1}
+STAGE_MAX_FUSED_RATIO = 0.6
+
+
+def stage_hbm_bytes(wire: str, elems: int, fused: bool) -> float:
+    per = _WIRE_B[wire] + 2 * _ACC_B          # read got + read acc + write
+    if not fused and wire != "fp32":
+        per += 2 * _ACC_B                     # fp32 temp: write + read back
+    return float(per * elems)
+
+
+def gs_stage_hbm_bytes(h: int, w: int, fused: bool) -> float:
+    # fused: one read of the block + one write of the update (residual
+    # and edges accumulate in-register; O(H+W) edge bytes are noise).
+    # unfused: the residual pass re-reads BOTH the new and the old block.
+    per = 2 * _ACC_B if fused else 4 * _ACC_B
+    return float(per * h * w)
+
+
+def bench_stages(smoke: bool = False) -> dict:
+    """Fused vs unfused collective-stage legs (the tentpole's bench gate).
+
+    Each wire dtype is timed both ways on the same payload: ``unfused``
+    materialises the cast/dequant intermediate behind an
+    ``optimization_barrier`` (the separate-pass shape XLA emits when the
+    stages stay distinct HLO ops), ``fused`` is the single-pass
+    :func:`repro.kernels.ops.combine_stage` (the jnp oracle off-TPU — one
+    XLA fusion — and the Pallas kernel on TPU).  Rows carry the ANALYTIC
+    per-stage HBM bytes as their ``combine_bytes`` feature under the
+    ``stage:*`` overhead classes, so ``tools/calibrate.py`` fits a
+    per-stage γ (seconds per HBM byte) with per-variant intercepts, and
+    the drift gate tracks both variants.  HARD ASSERTS fused bytes ≤
+    ``STAGE_MAX_FUSED_RATIO`` × unfused on every narrow-wire leg, and the
+    same for the fused Gauss–Seidel stencil stage.
+    """
+    elems = 1 << 18 if smoke else 1 << 20
+    reps = 3 if smoke else 10
+    key = jax.random.PRNGKey(7)
+    acc = jax.random.normal(key, (elems,), jnp.float32)
+    got32 = jax.random.normal(jax.random.PRNGKey(8), (elems,), jnp.float32)
+    report: dict = {"elems": elems, "max_fused_ratio": STAGE_MAX_FUSED_RATIO}
+
+    def wire_payload(wire):
+        if wire == "bf16":
+            return got32.astype(jnp.bfloat16), None
+        if wire == "int8":
+            return kernel_ops.quantize_stage(got32, impl="ref")
+        return got32, None
+
+    def unfused_fn(wire):
+        def f(args):
+            a, g, s = args
+            if wire == "int8":
+                deq = g.astype(jnp.float32) * s
+            elif wire == "bf16":
+                deq = g.astype(jnp.float32)
+            else:
+                deq = g
+            # keep the cast a SEPARATE materialised pass — the unfused
+            # HLO shape (without this, XLA fuses and measures the fused
+            # path twice).
+            deq, a2 = lax.optimization_barrier((deq, a))
+            return a2 + deq
+        return jax.jit(f)
+
+    def fused_fn(wire):
+        def f(args):
+            a, g, s = args
+            return kernel_ops.combine_stage(a, g, s, impl="ref")
+        return jax.jit(f)
+
+    for wire in ("fp32", "bf16", "int8"):
+        g, s = wire_payload(wire)
+        arg = (acc, g, s)
+        for variant, fn in (("unfused", unfused_fn(wire)),
+                            ("fused", fused_fn(wire))):
+            hbm = stage_hbm_bytes(wire, elems, variant == "fused")
+            report[f"combine_{wire}_{variant}"] = {
+                "measured_s": _time_call(fn, arg, reps),
+                "hbm_bytes": hbm,
+                "features": {"rounds": 0.0, "wire_bytes": 0.0,
+                             "combine_bytes": hbm},
+                "overhead_class": f"stage:{variant}",
+            }
+        ratio = (report[f"combine_{wire}_fused"]["hbm_bytes"]
+                 / report[f"combine_{wire}_unfused"]["hbm_bytes"])
+        report[f"combine_{wire}_fused"]["bytes_ratio"] = ratio
+        if wire != "fp32" and ratio > STAGE_MAX_FUSED_RATIO:
+            raise SystemExit(
+                f"fused {wire} combine stage lost its bytes win: "
+                f"{ratio:.2f}x unfused (max {STAGE_MAX_FUSED_RATIO})")
+
+    # Gauss–Seidel stencil stage: update + residual + boundary-pack in
+    # one pass vs the update-then-re-read shape.
+    H = W = 256 if smoke else 512
+    blk = jax.random.normal(key, (H, W), jnp.float32)
+    edges = (jax.random.normal(key, (W,), jnp.float32),
+             jax.random.normal(key, (H,), jnp.float32),
+             jax.random.normal(key, (W,), jnp.float32),
+             jax.random.normal(key, (H,), jnp.float32))
+
+    def gs_unfused(args):
+        b, (t, l, bt, r) = args
+        up = jnp.concatenate([t[None, :], b[:-1]], axis=0)
+        down = jnp.concatenate([b[1:], bt[None, :]], axis=0)
+        left = jnp.concatenate([l[:, None], b[:, :-1]], axis=1)
+        right = jnp.concatenate([b[:, 1:], r[:, None]], axis=1)
+        new = 0.25 * (up + down + left + right)
+        new2, b2 = lax.optimization_barrier((new, b))   # separate passes
+        res = jnp.sum(jnp.abs(new2 - b2))
+        return new, res, (new2[0], new2[-1], new2[:, 0], new2[:, -1])
+
+    def gs_fused(args):
+        b, (t, l, bt, r) = args
+        return kernel_ops.gs_stencil(b, t, l, bt, r, impl="ref")
+
+    for variant, fn in (("unfused", jax.jit(gs_unfused)),
+                        ("fused", jax.jit(gs_fused))):
+        hbm = gs_stage_hbm_bytes(H, W, variant == "fused")
+        report[f"gs_stencil_{variant}"] = {
+            "measured_s": _time_call(fn, (blk, (edges[0], edges[1],
+                                                edges[2], edges[3])), reps),
+            "hbm_bytes": hbm,
+            "features": {"rounds": 0.0, "wire_bytes": 0.0,
+                         "combine_bytes": hbm},
+            "overhead_class": f"stage:{variant}",
+        }
+    gs_ratio = (report["gs_stencil_fused"]["hbm_bytes"]
+                / report["gs_stencil_unfused"]["hbm_bytes"])
+    report["gs_stencil_fused"]["bytes_ratio"] = gs_ratio
+    if gs_ratio > STAGE_MAX_FUSED_RATIO:
+        raise SystemExit(f"fused stencil stage lost its bytes win: "
+                         f"{gs_ratio:.2f}x unfused")
+    return report
+
+
+def bench_lowered_stages(reps: int, elems: int) -> dict:
+    """Level-B fused-vs-unfused legs: the SAME flat-ring allreduce
+    lowered with and without the fused stage tier (plus the bf16-wire
+    variant), measured on the real 8-device mesh.  The wire-bytes
+    feature of the bf16 leg is halved — the narrow transport the fused
+    dequant-combine makes free."""
+    from jax.sharding import PartitionSpec as P
+    n = REF_RANKS
+    mesh = make_mesh((n,), ("data",))
+    nbytes = elems * 4
+    x = jax.random.normal(jax.random.PRNGKey(5), (n * elems,))
+    sched = schedule_ir.build("allreduce", "ring", n)
+    base_feat = features(sched, nbytes)
+
+    def lowered(**kw):
+        def f(xl):
+            return lowering.allreduce(xl, ("data",), algorithm="ring",
+                                      **kw)
+        return jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
+                                 out_specs=P(), axis_names={"data"},
+                                 check_vma=False))
+
+    legs = {
+        "unfused": (lowered(), dict(base_feat)),
+        "fused": (lowered(stage_impl="ref"), dict(base_feat)),
+        "fused_bf16": (lowered(stage_impl="ref", wire="bf16"),
+                       dict(base_feat,
+                            wire_bytes=base_feat["wire_bytes"] / 2)),
+    }
+    report = {"ranks": n, "payload_bytes": nbytes}
+    for name, (fn, feat) in legs.items():
+        txt = fn.lower(x).as_text()
+        report[name] = {
+            "measured_s": _time_call(fn, x, reps),
+            "collective_permutes": txt.count("collective_permute"),
+            "features": feat,
+        }
+    return report
+
+
+def bench_inter(reps: int, elems: int) -> dict:
+    """Inter-axis (pod-level) butterfly legs: measured rows under the
+    ``inter:butterfly`` overhead class, so the calibration fit carries a
+    separate ``inter`` α/β family — the two-tier constants
+    ``best_schedule`` uses to cost ``build_hierarchical`` candidates
+    (``algorithm="auto"`` over two-level topologies)."""
+    from jax.sharding import PartitionSpec as P
+    report: dict = {"payload_bytes": elems * 4}
+    for n_pods, shape in ((2, (2, 4)), (4, (4, 2))):
+        mesh = make_mesh(shape, ("pod", "data"))
+        rounds = n_pods.bit_length() - 1
+
+        def f(xl):
+            return lowering._butterfly_allreduce(xl, "pod", n_pods)
+        sf = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
+                               out_specs=P("pod"),
+                               axis_names={"pod", "data"},
+                               check_vma=False))
+        x = jax.random.normal(jax.random.PRNGKey(9), (n_pods * elems,))
+        nbytes = elems * 4
+        report[f"butterfly_{n_pods}pods"] = {
+            "measured_s": _time_call(sf, x, reps),
+            "features": {"rounds": float(rounds),
+                         "wire_bytes": float(rounds * nbytes),
+                         "combine_bytes": float(rounds * nbytes)},
+            "overhead_class": "inter:butterfly",
+        }
     return report
 
 
@@ -500,6 +719,35 @@ def bench(print_fn=print, smoke: bool = False,
         rows.append((f"allreduce_{name}", e["measured_s"] * 1e6,
                      f"ppermutes={e['collective_permutes']};"
                      f"all_reduces={e['all_reduces']}"))
+
+    # fused-stage legs (Pallas executor tier): per-stage HBM-bytes rows
+    # for the stage:* γ fit, the hard ≤0.6× bytes assert, and the
+    # Level-B fused-vs-unfused ring lowering on the real mesh.
+    stages = bench_stages(smoke)
+    report["stages"] = stages
+    for name, e in stages.items():
+        if isinstance(e, dict) and "measured_s" in e:
+            rows.append((f"stage_{name}", e["measured_s"] * 1e6,
+                         f"hbm_bytes={e['hbm_bytes']:.0f};"
+                         f"class={e['overhead_class']}"))
+    lowered_stages = bench_lowered_stages(max(reps * 5, 10),
+                                          elems=1 << 14 if smoke
+                                          else 1 << 16)
+    report["lowered_stages"] = lowered_stages
+    for name in ("unfused", "fused", "fused_bf16"):
+        e = lowered_stages[name]
+        rows.append((f"lowered_ring_{name}", e["measured_s"] * 1e6,
+                     f"ppermutes={e['collective_permutes']}"))
+
+    # inter-axis butterfly rows: the two-tier (inter family) constants
+    # for hierarchical candidates under algorithm="auto".
+    inter = bench_inter(max(reps * 5, 10), elems=1 << 14 if smoke
+                        else 1 << 16)
+    report["inter"] = inter
+    for name, e in inter.items():
+        if isinstance(e, dict) and "measured_s" in e:
+            rows.append((f"inter_{name}", e["measured_s"] * 1e6,
+                         f"rounds={e['features']['rounds']:.0f}"))
 
     # compiled vs interpreted schedule executors (Level-A host path):
     # per-executor overhead_class rows for the per-class calibration fit

@@ -26,6 +26,59 @@ PEAK_FLOPS = 197e12      # bf16 per chip
 HBM_BW = 819e9           # bytes/s per chip
 LINK_BW = 50e9           # bytes/s per ICI link
 
+# ---------------------------------------------------------------------------
+# Fused collective-stage roofline (the Pallas executor tier)
+# ---------------------------------------------------------------------------
+# Per-element HBM bytes of one reduce-scatter combine stage (fp32
+# accumulator, the wire dtype on the received chunk) and of the fused
+# Gauss–Seidel stencil stage.  The fused kernels read each operand and
+# write the result ONCE; the unfused XLA shape additionally materialises
+# the fp32 cast/dequant intermediate (combine) or re-reads the block for
+# the residual pass (stencil).  These are the roofline-model numbers the
+# bench gate pins: every narrow-wire fused stage must come in at
+# ≤ STAGE_MAX_FUSED_RATIO × the unfused bytes.
+STAGE_MAX_FUSED_RATIO = 0.6
+_ACC_B = 4
+_WIRE_B = {"fp32": 4, "bf16": 2, "int8": 1}
+
+
+def stage_bytes_per_elem(wire: str, fused: bool) -> int:
+    per = _WIRE_B[wire] + 2 * _ACC_B          # read got + read acc + write
+    if not fused and wire != "fp32":
+        per += 2 * _ACC_B                     # fp32 temp: write + read back
+    return per
+
+
+def gs_stage_bytes_per_elem(fused: bool) -> int:
+    return 2 * _ACC_B if fused else 4 * _ACC_B
+
+
+def stage_rows(elems: int = 1 << 20):
+    """Fused-vs-unfused stage roofline rows (always emitted — they are
+    analytic, needing no dry-run record) + the hard bytes-ratio assert."""
+    rows = []
+    for wire in ("fp32", "bf16", "int8"):
+        per_f = stage_bytes_per_elem(wire, True)
+        per_u = stage_bytes_per_elem(wire, False)
+        ratio = per_f / per_u
+        assert wire == "fp32" or ratio <= STAGE_MAX_FUSED_RATIO, \
+            (wire, ratio)
+        t_f = per_f * elems / HBM_BW
+        t_u = per_u * elems / HBM_BW
+        rows.append((f"roofline_stage_combine_{wire}", t_f * 1e6,
+                     f"fused_bytes={per_f * elems};"
+                     f"unfused_bytes={per_u * elems};"
+                     f"ratio={ratio:.3f};unfused_us={t_u * 1e6:.1f}"))
+    per_f, per_u = gs_stage_bytes_per_elem(True), gs_stage_bytes_per_elem(
+        False)
+    ratio = per_f / per_u
+    assert ratio <= STAGE_MAX_FUSED_RATIO, ratio
+    rows.append(("roofline_stage_gs_stencil", per_f * elems / HBM_BW * 1e6,
+                 f"fused_bytes={per_f * elems};"
+                 f"unfused_bytes={per_u * elems};ratio={ratio:.3f};"
+                 f"unfused_us={per_u * elems / HBM_BW * 1e6:.1f}"))
+    return rows
+
 
 def analyze(rec: Dict) -> Optional[Dict]:
     if not rec.get("ok"):
@@ -67,8 +120,12 @@ def analyze(rec: Dict) -> Optional[Dict]:
 
 
 def bench(print_fn=print, path: str = "results/dryrun_single.json"):
-    rows = []
+    # the fused-stage rows are analytic — emitted (and asserted) whether
+    # or not a dry-run record exists.
+    rows = stage_rows()
     if not os.path.exists(path):
+        for r in rows:
+            print_fn(f"{r[0]},{r[1]:.1f},{r[2]}")
         print_fn(f"roofline,0.0,skipped (no {path}; run repro.launch.dryrun"
                  " --all --out results/dryrun_single.json)")
         return rows

@@ -84,8 +84,8 @@ from . import tac
 from . import program as program_ir
 from . import schedule as schedule_ir
 from .program import bind_inputs as _bind_inputs
-from .schedule import (Combine, Const, Copy, Pack, Recv, Schedule, Send,
-                       Slice, Unpack)
+from .schedule import (Combine, Concat, Const, Copy, Pack, Recv, Schedule,
+                       Send, Slice, Unpack)
 from .events import (current_task, get_current_event_counter,
                      increase_current_task_event_counter,
                      decrease_task_event_counter)
@@ -501,6 +501,11 @@ def _interpret(sched: Schedule, comm, rank: int, tag, *, value=None,
         elif isinstance(o, Slice):
             flat = np.asarray(env[o.src]).reshape(-1)
             env[o.out] = np.array_split(flat, o.parts)[o.index]
+        elif isinstance(o, Concat):
+            flat = np.concatenate([np.asarray(env[p]).reshape(-1)
+                                   for p in o.parts])
+            env[o.out] = flat if o.like is None else flat.reshape(
+                np.asarray(env[o.like]).shape)
         elif isinstance(o, Const):
             env[o.out] = o.value
         else:                       # pragma: no cover - new op kinds
@@ -584,13 +589,18 @@ class Collectives:
 
     def __init__(self, comm, *, alpha: float = 1e-6, beta: float = 1e-9,
                  gamma: float = 0.0, calibration: Any = None,
-                 executor: str = "compiled") -> None:
+                 executor: str = "compiled",
+                 hierarchy: Optional[int] = None,
+                 inter_alpha: Optional[float] = None,
+                 inter_beta: Optional[float] = None) -> None:
         self.executor = _norm_executor(executor)
         self.comm = comm
         self.world = comm   # historical alias (pre-sub-communicator name)
         self.alpha = alpha
         self.beta = beta
         self.gamma = gamma
+        self.inter_alpha = inter_alpha
+        self.inter_beta = inter_beta
         if calibration is not None:
             # a CALIBRATION.json path (tools/calibrate.py output) or a
             # pre-loaded {"alpha", "beta", "gamma"} mapping: measured
@@ -601,6 +611,27 @@ class Collectives:
             self.alpha = float(consts["alpha"])
             self.beta = float(consts["beta"])
             self.gamma = float(consts["gamma"])
+            if inter_alpha is None and not isinstance(calibration, dict):
+                # pick up the calibrated inter-pod transport when the
+                # benchmark legs have fitted one ("inter" family) — the
+                # constants the two-tier auto candidates pay cross-pod.
+                try:
+                    inter = schedule_ir.load_calibration(calibration,
+                                                         family="inter")
+                except KeyError:
+                    pass
+                else:
+                    self.inter_alpha = inter["alpha"]
+                    self.inter_beta = inter["beta"]
+        # Pod structure for algorithm="auto": `hierarchy` consecutive
+        # ranks form a pod; auto then also considers the composed
+        # hierarchical allreduce and costs EVERY candidate under the
+        # two-tier link (see schedule.best_schedule).
+        self.hierarchy = int(hierarchy) if hierarchy else None
+        if self.hierarchy is not None and (
+                self.hierarchy < 1 or comm.size % self.hierarchy):
+            raise ValueError(f"hierarchy pod size {hierarchy} must divide "
+                             f"the communicator size {comm.size}")
         self._seq = [itertools.count() for _ in range(comm.size)]
 
     # -- plumbing ----------------------------------------------------------
@@ -658,7 +689,10 @@ class Collectives:
                     nbytes = _payload_nbytes(value)
                 return schedule_ir.best_schedule(
                     name, self.comm.size, nbytes, alpha=self.alpha,
-                    beta=self.beta, gamma=self.gamma, root=root)
+                    beta=self.beta, gamma=self.gamma, root=root,
+                    intra=self.hierarchy if name == "allreduce" else None,
+                    inter_alpha=self.inter_alpha,
+                    inter_beta=self.inter_beta)
         return schedule_ir.build(name, algorithm, self.comm.size,
                                  root=root, segments=segments)
 
@@ -744,18 +778,38 @@ class Collectives:
 
     def allgather(self, value: Any, *, rank: int,
                   algorithm: Optional[str] = None, mode: str = "blocking",
-                  key: Any = None):
-        """Returns the list of every rank's contribution, rank order."""
+                  key: Any = None, segments: int = 1):
+        """Returns the list of every rank's contribution, rank order.
+
+        ``segments > 1`` runs the segmented ring (contributions sliced
+        into pipelined sub-rings); it requires array payloads of one
+        common shape (the MPI uniform-count contract) and returns each
+        contribution as an array of that shape."""
+        if segments > 1:
+            algorithm = algorithm or "ring"
+            if _norm_alg(algorithm) != "ring":
+                raise ValueError("segmented allgather requires the ring "
+                                 "algorithm")
+            value = np.asarray(value)
         return self._run("allgather", algorithm, rank, key, mode,
-                         value=value)
+                         value=value, segments=segments)
 
     def reduce_scatter(self, value: Any, *, rank: int, op="sum",
                        algorithm: Optional[str] = None,
-                       mode: str = "blocking", key: Any = None):
+                       mode: str = "blocking", key: Any = None,
+                       segments: int = 1):
         """Returns this rank's ``np.array_split`` chunk of the flattened
-        element-wise reduction."""
+        element-wise reduction.  ``segments > 1`` pipelines the ring
+        (combine of segment *k* overlaps transport of segment *k+1*);
+        the returned chunk is bit-identical to the unsegmented one."""
+        if segments > 1:
+            algorithm = algorithm or "ring"
+            if _norm_alg(algorithm) != "ring":
+                raise ValueError("segmented reduce_scatter requires the "
+                                 "ring algorithm")
         return self._run("reduce_scatter", algorithm, rank, key, mode,
-                         value=np.asarray(value), op=_op_fn(op))
+                         value=np.asarray(value), op=_op_fn(op),
+                         segments=segments)
 
     def alltoall(self, blocks: Sequence[Any], *, rank: int,
                  algorithm: Optional[str] = None, mode: str = "blocking",
@@ -836,8 +890,8 @@ class Collectives:
         "reduce": ({"value", "op", "root"}, {"value"}),
         "allreduce": ({"value", "op", "segments", "hierarchical"},
                       {"value"}),
-        "allgather": ({"value"}, {"value"}),
-        "reduce_scatter": ({"value", "op"}, {"value"}),
+        "allgather": ({"value", "segments"}, {"value"}),
+        "reduce_scatter": ({"value", "op", "segments"}, {"value"}),
         "alltoall": ({"blocks"}, {"blocks"}),
     }
 
@@ -875,8 +929,12 @@ class Collectives:
                                   segments=kw.get("segments", 1),
                                   hierarchical=kw.get("hierarchical"))
         if name == "allgather":
+            value = kw["value"]
+            segments = kw.get("segments", 1)
+            if segments > 1:
+                value = np.asarray(value)
             return self._schedule(name, algorithm, rank, key,
-                                  value=kw["value"])
+                                  value=value, segments=segments)
         blocks = list(kw["blocks"])
         if len(blocks) != self.world.size:
             raise ValueError("alltoall block count != world size")
@@ -919,6 +977,13 @@ class PersistentCollective:
         self.op = _op_fn(op) if name in _REDUCING else None
         self._id = next(_PERSISTENT_IDS)
         self._seq = [itertools.count() for _ in range(coll.comm.size)]
+        # Per-rank combine-buffer arenas: compiled runs write reduction
+        # results into these pre-allocated buffers (ufunc ``out=``)
+        # instead of allocating per round, reused across every posting
+        # of this plan — the MPI persistent-request buffer registration.
+        # Sound because persistent postings are serialised per rank
+        # (wait before re-start), which the drivers enforce.
+        self._arenas = [dict() for _ in range(coll.comm.size)]
         # The persistent plan (MPI_*_init analogue): under the owner's
         # compiled executor the pre-bound program is resolved once here
         # and re-posted by every start()/run_group() with a fresh tag
@@ -958,7 +1023,8 @@ class PersistentCollective:
         if prog is not None:
             if key is None:
                 key = next(self._seq[rank])
-            return prog.gen(rank, key, value=value, blocks=blocks)
+            return prog.gen(rank, key, value=value, blocks=blocks,
+                            arena=self._arenas[rank])
         return _interpret(self.sched, self.coll.comm, rank,
                           self._tagger(rank, key), value=value,
                           op=self.op, blocks=blocks)

@@ -48,6 +48,21 @@ combining operator is addition (the gradient/residual case), payloads are
 dense arrays, and flat explicit-round lowerings run over ONE mesh axis —
 ``native`` takes an axis tuple, and ``hierarchical`` takes exactly two
 axes in ``(inter, intra)`` order.
+
+**Pallas executor tier** (``stage_impl=``): the elementwise stages
+between ppermute rounds — reduce-scatter combine, allgather install,
+wire cast/dequant — are memory-bound work that unfused XLA round-trips
+through HBM once per stage.  ``stage_impl="pallas"`` routes them through
+the fused single-pass kernels in :mod:`repro.kernels.collective_stages`
+(``"pallas_interpret"`` for CPU parity runs, ``"ref"`` for the jnp
+oracle); ``stage_impl=None`` keeps the plain XLA elementwise path
+byte-for-byte.  ``wire="bf16"``/``"int8"`` additionally narrows the ring
+transport dtype (explicit-round ring only): reduce-scatter rounds
+quantise the outgoing chunk and the fused combine dequantises while
+accumulating; the allgather leg quantises each reduced chunk ONCE at its
+owner, forwards the wire payload around the whole ring, and every rank
+dequantises all chunks at the end — so all ranks compute bit-identical
+results from the same wire bytes.
 """
 
 from __future__ import annotations
@@ -59,10 +74,30 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..compat import axis_size
+from ..kernels import ops as kernel_ops
 from . import schedule as schedule_ir
 from .schedule import Schedule, Send
 
 Axes = Union[str, Sequence[str]]
+
+_WIRE_DTYPES = {"bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
+def _check_stage_opts(algorithm: str, stage_impl: Optional[str],
+                      wire: Optional[str]) -> None:
+    if stage_impl not in (None, "pallas", "pallas_interpret", "ref"):
+        raise ValueError(f"unknown stage_impl {stage_impl!r}")
+    if wire is None:
+        return
+    if wire not in _WIRE_DTYPES:
+        raise ValueError(f"unknown wire dtype {wire!r}; choose from "
+                         f"{sorted(_WIRE_DTYPES)}")
+    if stage_impl is None:
+        raise ValueError("wire= needs a fused stage tier; pass "
+                         "stage_impl=")
+    if algorithm != "ring":
+        raise ValueError(f"wire cast covers explicit ring rounds only, "
+                         f"not algorithm={algorithm!r}")
 
 
 def _single_axis(axis_name: Axes, what: str) -> str:
@@ -103,17 +138,30 @@ def sends_per_rank(sched: Schedule) -> int:
 # ---------------------------------------------------------------------------
 def allreduce(x: jax.Array, axes: Axes, *,
               algorithm: str = "native", segments: int = 1,
-              sched: Optional[Schedule] = None) -> jax.Array:
+              sched: Optional[Schedule] = None,
+              stage_impl: Optional[str] = None,
+              wire: Optional[str] = None) -> jax.Array:
     """Sum-allreduce ``x`` over ``axes`` with a chosen schedule.
 
     ``algorithm="native"`` emits one fused ``lax.psum`` node (XLA picks
     the rounds); ``"ring"``/``"doubling"`` build (or take) a schedule and
     emit its explicit ppermute rounds.  Must be called inside
     ``shard_map`` manual over ``axes``.
+
+    ``stage_impl`` routes the between-round elementwise stages through
+    the fused Pallas tier (``"pallas"``/``"pallas_interpret"``/``"ref"``;
+    ``None`` keeps the plain XLA path).  ``wire`` narrows the ring
+    transport dtype (``"bf16"``/``"int8"``; needs ``stage_impl``, ring
+    algorithm only).
     """
     if sched is None and algorithm == "native":
+        if stage_impl is not None or wire is not None:
+            raise ValueError("native lowering is one fused psum node — "
+                             "no stages to fuse; drop stage_impl=/wire=")
         return lax.psum(x, tuple(axes) if not isinstance(axes, str)
                         else (axes,))
+    _check_stage_opts(algorithm if sched is None else sched.algorithm,
+                      stage_impl, wire)
     if sched is None and algorithm == "hierarchical":
         if segments != 1:
             # mirror Collectives._resolve: the composed schedule is fixed,
@@ -127,35 +175,42 @@ def allreduce(x: jax.Array, axes: Axes, *,
         axis = _single_axis(axes, f"allreduce[{algorithm}]")
         sched = schedule_ir.build("allreduce", algorithm, axis_size(axis),
                                   segments=segments)
-    return lower_allreduce(sched, x, axes)
+    return lower_allreduce(sched, x, axes, stage_impl=stage_impl,
+                           wire=wire)
 
 
-def lower_allreduce(sched: Schedule, x: jax.Array,
-                    axes: Axes) -> jax.Array:
+def lower_allreduce(sched: Schedule, x: jax.Array, axes: Axes, *,
+                    stage_impl: Optional[str] = None,
+                    wire: Optional[str] = None) -> jax.Array:
     """Lower an allreduce schedule to explicit in-graph rounds."""
     if sched.name != "allreduce":
         raise ValueError(f"expected an allreduce schedule, got "
                          f"{sched.name!r}")
+    _check_stage_opts(sched.algorithm, stage_impl, wire)
     if sched.algorithm == "hierarchical":
-        return _hierarchical_allreduce(sched, x, axes)
+        return _hierarchical_allreduce(sched, x, axes,
+                                       stage_impl=stage_impl)
     axis = _single_axis(axes, f"allreduce[{sched.algorithm}]")
     _check_world(sched, axis)
     if sched.n == 1:
         return x
     if sched.algorithm == "ring":
-        return _ring_allreduce(x, axis, sched.n, sched.segments)
+        return _ring_allreduce(x, axis, sched.n, sched.segments,
+                               stage_impl=stage_impl, wire=wire)
     if sched.algorithm == "doubling":
         if sched.n & (sched.n - 1):
             # fold/unfold needs rank-asymmetric control flow, which SPMD
             # lowering cannot express — the fused node is the honest
             # equivalent (same dataflow position, XLA picks the rounds).
             return lax.psum(x, (axis,))
-        return _butterfly_allreduce(x, axis, sched.n)
+        return _butterfly_allreduce(x, axis, sched.n,
+                                    stage_impl=stage_impl)
     raise ValueError(f"cannot lower algorithm {sched.algorithm!r}")
 
 
-def _ring_allreduce(x: jax.Array, axis: str, n: int,
-                    segments: int) -> jax.Array:
+def _ring_allreduce(x: jax.Array, axis: str, n: int, segments: int,
+                    stage_impl: Optional[str] = None,
+                    wire: Optional[str] = None) -> jax.Array:
     """Ring allreduce as ``2(n-1)·S`` explicit ppermute rounds.
 
     Mirrors the host schedule chunk-for-chunk: reduce-scatter rounds send
@@ -164,6 +219,13 @@ def _ring_allreduce(x: jax.Array, axis: str, n: int,
     per-segment chains carry no cross-segment dependencies, so XLA's
     scheduler overlaps segment ``k+1`` transport with segment ``k``
     combine — the pipelined schedule at Level B.
+
+    With ``stage_impl`` the per-round combine runs as ONE fused kernel
+    pass; with ``wire`` the transport additionally travels in the narrow
+    dtype — int8 rounds ppermute the quantised chunk plus its scalar
+    scale, and the allgather leg quantises each reduced chunk once at its
+    owner and dequantises everywhere at the end (all ranks decode the
+    same wire bytes, so results stay cross-rank bit-identical).
     """
     idx = lax.axis_index(axis)
     orig_shape, orig_dtype = x.shape, x.dtype
@@ -178,25 +240,78 @@ def _ring_allreduce(x: jax.Array, axis: str, n: int,
     for k in range(n - 1):              # reduce-scatter leg
         for s in range(segments):
             src_c = (idx - 1 - k) % n
-            got = lax.ppermute(jnp.take(chunks[:, s], src_c, axis=0),
-                               axis, fwd)
+            send = jnp.take(chunks[:, s], src_c, axis=0)
             tgt = (idx - 2 - k) % n
-            chunks = chunks.at[tgt, s].add(got)
-    for k in range(n - 1):              # allgather leg
+            if stage_impl is None:
+                got = lax.ppermute(send, axis, fwd)
+                chunks = chunks.at[tgt, s].add(got)
+                continue
+            gscale = None
+            if wire == "int8":
+                q, scale = kernel_ops.quantize_stage(send,
+                                                     impl=stage_impl)
+                send = q
+                gscale = lax.ppermute(scale, axis, fwd)
+            elif wire == "bf16":
+                send = send.astype(jnp.bfloat16)
+            got = lax.ppermute(send, axis, fwd)
+            row = jnp.take(chunks[:, s], tgt, axis=0)
+            new = kernel_ops.combine_stage(row, got, gscale,
+                                           impl=stage_impl)
+            chunks = chunks.at[tgt, s].set(new)
+    if wire is None:
+        for k in range(n - 1):          # allgather leg
+            for s in range(segments):
+                src_c = (idx - k) % n
+                got = lax.ppermute(jnp.take(chunks[:, s], src_c, axis=0),
+                                   axis, fwd)
+                tgt = (idx - k - 1) % n
+                chunks = chunks.at[tgt, s].set(got)
+    else:
+        # Allgather leg in wire dtype: each rank owns reduced chunk
+        # ``idx`` after the RS leg — quantise it ONCE, forward the wire
+        # payload (+ scale) around the ring, then dequantise every chunk
+        # (own included) so all ranks decode identical wire bytes.
+        wdt = _WIRE_DTYPES[wire]
+        wchunks = jnp.zeros(chunks.shape, wdt)
+        scales = jnp.zeros((n, segments), jnp.float32)
         for s in range(segments):
-            src_c = (idx - k) % n
-            got = lax.ppermute(jnp.take(chunks[:, s], src_c, axis=0),
-                               axis, fwd)
-            tgt = (idx - k - 1) % n
-            chunks = chunks.at[tgt, s].set(got)
+            own = jnp.take(chunks[:, s], idx, axis=0)
+            if wire == "int8":
+                q, scale = kernel_ops.quantize_stage(own, impl=stage_impl)
+            else:
+                q, scale = own.astype(wdt), jnp.float32(1.0)
+            wchunks = wchunks.at[idx, s].set(q)
+            scales = scales.at[idx, s].set(scale)
+        for k in range(n - 1):
+            for s in range(segments):
+                src_c = (idx - k) % n
+                got = lax.ppermute(jnp.take(wchunks[:, s], src_c, axis=0),
+                                   axis, fwd)
+                gscale = lax.ppermute(jnp.take(scales[:, s], src_c,
+                                               axis=0), axis, fwd)
+                tgt = (idx - k - 1) % n
+                wchunks = wchunks.at[tgt, s].set(got)
+                scales = scales.at[tgt, s].set(gscale)
+        rows = []
+        for i in range(n):
+            segs = []
+            for s in range(segments):
+                segs.append(kernel_ops.combine_stage(
+                    chunks[i, s], wchunks[i, s],
+                    scales[i, s] if wire == "int8" else None,
+                    accumulate=False, impl=stage_impl))
+            rows.append(jnp.stack(segs))
+        chunks = jnp.stack(rows)
     out = chunks.reshape(-1)
     if pad:
         out = out[:m]
     return out.reshape(orig_shape).astype(orig_dtype)
 
 
-def _hierarchical_allreduce(sched: Schedule, x: jax.Array,
-                            axes: Axes) -> jax.Array:
+def _hierarchical_allreduce(sched: Schedule, x: jax.Array, axes: Axes,
+                            stage_impl: Optional[str] = None
+                            ) -> jax.Array:
     """Lower a :func:`repro.core.schedule.build_hierarchical` schedule
     over two mesh axes.
 
@@ -232,13 +347,20 @@ def _hierarchical_allreduce(sched: Schedule, x: jax.Array,
     for k in range(n_i - 1):            # stage 1: intra reduce-scatter
         got = lax.ppermute(jnp.take(chunks, (li - 1 - k) % n_i, axis=0),
                            intra_axis, fwd)
-        chunks = chunks.at[(li - 2 - k) % n_i].add(got)
+        tgt = (li - 2 - k) % n_i
+        if stage_impl is None:
+            chunks = chunks.at[tgt].add(got)
+        else:
+            row = jnp.take(chunks, tgt, axis=0)
+            chunks = chunks.at[tgt].set(
+                kernel_ops.combine_stage(row, got, impl=stage_impl))
     own = jnp.take(chunks, li % n_i, axis=0)
     if n_e > 1:                         # stage 2: inter allreduce
         if n_e & (n_e - 1):
             own = lax.psum(own, (inter_axis,))
         else:
-            own = _butterfly_allreduce(own, inter_axis, n_e)
+            own = _butterfly_allreduce(own, inter_axis, n_e,
+                                       stage_impl=stage_impl)
     chunks = chunks.at[li % n_i].set(own)
     for k in range(n_i - 1):            # stage 3: intra allgather
         got = lax.ppermute(jnp.take(chunks, (li - k) % n_i, axis=0),
@@ -250,14 +372,19 @@ def _hierarchical_allreduce(sched: Schedule, x: jax.Array,
     return out.reshape(orig_shape).astype(orig_dtype)
 
 
-def _butterfly_allreduce(x: jax.Array, axis: str, n: int) -> jax.Array:
+def _butterfly_allreduce(x: jax.Array, axis: str, n: int,
+                         stage_impl: Optional[str] = None) -> jax.Array:
     """Recursive doubling as ``log2 n`` bidirectional ppermute rounds
     (power-of-two rank counts)."""
     acc = x
     mask = 1
     while mask < n:
         perm = [(i, i ^ mask) for i in range(n)]
-        acc = acc + lax.ppermute(acc, axis, perm)
+        got = lax.ppermute(acc, axis, perm)
+        if stage_impl is None:
+            acc = acc + got
+        else:
+            acc = kernel_ops.combine_stage(acc, got, impl=stage_impl)
         mask <<= 1
     return acc
 

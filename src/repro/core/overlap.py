@@ -105,7 +105,9 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
                bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                compress: Optional[str] = None, mean: bool = True,
                algorithm: str = "native", segments: int = 1,
-               wire: str = "fp32", hierarchical: bool = False):
+               wire: str = "fp32", hierarchical: bool = False,
+               stage_impl: Optional[str] = None,
+               stage_wire: Optional[str] = None):
     """Reduce gradients over the (manual) DP axes with a chosen schedule.
 
     Must be called inside ``shard_map`` manual over ``axes``.  ``mode``
@@ -129,9 +131,20 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
     SENT, so ``bucket_bytes`` bounds the real message size under either
     setting.  The wire rule is shared by all three modes, so mode
     selection never changes numerics.
+
+    ``stage_impl`` routes each bucket's between-round elementwise stages
+    through the fused Pallas tier (see
+    :func:`repro.core.lowering.allreduce`; explicit-round algorithms
+    only).  ``stage_wire`` (``"bf16"``/``"int8"``) additionally narrows
+    the ring transport dtype per round — distinct from ``wire=``, which
+    picks the dtype a leaf is PRESENTED to the collective in.
     """
     if isinstance(axes, str):
         axes = (axes,)
+    if compress == "int8" and (stage_impl is not None
+                               or stage_wire is not None):
+        raise ValueError("compress='int8' uses its own quantised "
+                         "all_to_all path; drop stage_impl=/stage_wire=")
     if hierarchical:
         if len(tuple(axes)) != 2:
             raise ValueError(f"hierarchical grad sync needs exactly two "
@@ -153,7 +166,8 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
         if compress == "bf16":
             x = x.astype(jnp.bfloat16)
         x = lowering.allreduce(x, axis_arg, algorithm=algorithm,
-                               segments=segments)
+                               segments=segments, stage_impl=stage_impl,
+                               wire=stage_wire)
         return x.astype(jnp.float32)
 
     if wire not in ("fp32", "leaf"):

@@ -59,11 +59,24 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from . import tac
-from .schedule import (Combine, Const, Copy, Pack, Recv, Schedule, Send,
-                       Slice, Unpack)
+from .schedule import (Combine, Concat, Const, Copy, Pack, Recv, Schedule,
+                       Send, Slice, Unpack)
 
 __all__ = ["CompiledProgram", "compile_schedule", "cache_stats",
            "clear_cache", "CACHE_MAX", "bind_inputs"]
+
+# Reserved env key under which a caller-owned buffer arena rides along a
+# run.  An arena maps combine-output buffer names to pre-allocated numpy
+# arrays that ufunc combines write into with ``out=`` instead of
+# allocating a fresh result per round — the zero-copy half of a
+# persistent plan (MPI_Allreduce_init's pre-registered buffers).  The
+# arena is only sound when the holder serialises iterations: a run must
+# complete (every receive consumed by the peers) before the next one is
+# posted, because the in-process transport passes arrays by reference
+# and the next iteration overwrites them in place.  That is exactly the
+# MPI persistent-request contract (wait before re-start), and it is what
+# :class:`repro.core.collectives.PersistentCollective` guarantees.
+_ARENA = "__arena__"
 
 
 def bind_inputs(sched: Schedule, value, blocks, sends):
@@ -127,9 +140,27 @@ def _compile_op(o, rank: int, isend, irecv, wranks, mktag, op):
             raise ValueError(
                 f"schedule combines ({o!r}) but no op was compiled in")
         out, a, b = o.out, o.a, o.b
-
-        def action(env, pending, key):
-            env[out] = op(env[a], env[b])
+        if isinstance(op, np.ufunc):
+            # Named reductions resolve to raw ufuncs, which accept
+            # ``out=`` — under an arena the combine writes into a
+            # persistent per-output buffer instead of allocating.
+            def action(env, pending, key):
+                va, vb = env[a], env[b]
+                arena = env.get(_ARENA)
+                if (arena is None or not isinstance(va, np.ndarray)
+                        or not isinstance(vb, np.ndarray)
+                        or va.shape != vb.shape):
+                    env[out] = op(va, vb)
+                    return
+                buf = arena.get(out)
+                rt = np.result_type(va, vb)
+                if buf is None or buf.shape != va.shape or buf.dtype != rt:
+                    buf = np.empty(va.shape, rt)
+                    arena[out] = buf
+                env[out] = op(va, vb, out=buf)
+        else:
+            def action(env, pending, key):
+                env[out] = op(env[a], env[b])
     elif isinstance(o, Copy):
         out, src_buf = o.out, o.src
 
@@ -152,6 +183,14 @@ def _compile_op(o, rank: int, isend, irecv, wranks, mktag, op):
         def action(env, pending, key):
             env[out] = np.array_split(
                 np.asarray(env[src_buf]).reshape(-1), parts)[index]
+    elif isinstance(o, Concat):
+        out, parts, like = o.out, o.parts, o.like
+
+        def action(env, pending, key):
+            flat = np.concatenate([np.asarray(env[p]).reshape(-1)
+                                   for p in parts])
+            env[out] = flat if like is None else flat.reshape(
+                np.asarray(env[like]).shape)
     elif isinstance(o, Const):
         out, value = o.out, o.value
 
@@ -178,7 +217,15 @@ def _compile_finish(sched: Schedule) -> Optional[Callable]:
 
         def finish(env, shape, rank):
             out = out_bufs[rank]
-            return None if out is None else env[out]
+            if out is None:
+                return None
+            v = env[out]
+            # Under an arena the final combine result lives in a reused
+            # buffer; hand the caller a copy so the next iteration's
+            # in-place writes cannot reach a result already returned.
+            if _ARENA in env and isinstance(v, np.ndarray):
+                return v.copy()
+            return v
     elif kind == "list":
         names = tuple(("g", i) for i in range(sched.n))
 
@@ -284,11 +331,16 @@ class CompiledProgram:
 
     # -- execution ----------------------------------------------------------
     def gen(self, rank: int, key: Any, *, value=None, blocks=None,
-            sends=None):
+            sends=None, arena: Optional[Dict[Any, Any]] = None):
         """One rank's compiled run — same generator contract as the
         interpreter: yields outstanding handle(s), result via
         ``StopIteration``.  Binding and validation happen on first
-        advance (generator semantics), matching ``_interpret``."""
+        advance (generator semantics), matching ``_interpret``.
+
+        ``arena`` is an optional caller-owned, per-rank dict of reusable
+        combine buffers (see :data:`_ARENA`); pass the same dict on every
+        iteration to eliminate per-round result allocations.  The caller
+        must not re-post before the previous run completed."""
         if not 0 <= rank < self.sched.n:
             raise ValueError(
                 f"rank {rank} out of range for n={self.sched.n}")
@@ -299,10 +351,12 @@ class CompiledProgram:
                 f"{epoch_of(self.comm)} (a rank failed or the communicator "
                 f"was revoked) — recompile via compile_schedule()")
         plan = self._rank_plan(rank)
-        return self._run(plan, rank, key, value, blocks, sends)
+        return self._run(plan, rank, key, value, blocks, sends, arena)
 
-    def _run(self, plan, rank, key, value, blocks, sends):
+    def _run(self, plan, rank, key, value, blocks, sends, arena=None):
         env, shape = bind_inputs(self.sched, value, blocks, sends)
+        if arena is not None:
+            env[_ARENA] = arena
         pending: Dict[Any, Any] = {}
         for waits, action in plan.steps:
             if waits:

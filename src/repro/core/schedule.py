@@ -59,7 +59,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
     "Op", "Send", "Recv", "Combine", "Copy", "Pack", "Unpack", "Slice",
-    "Const", "Schedule", "Transfer", "build", "build_neighbor",
+    "Concat", "Const", "Schedule", "Transfer", "build", "build_neighbor",
     "build_hierarchical", "best_schedule", "load_calibration",
     "COLLECTIVES", "ALGORITHMS",
 ]
@@ -189,6 +189,28 @@ class Slice(Op):
     @property
     def reads(self):
         return (self.src,)
+
+    @property
+    def writes(self):
+        return (self.out,)
+
+
+@dataclass(frozen=True)
+class Concat(Op):
+    """``out = concatenate(flatten(p) for p in parts)`` — reassemble a
+    segmented payload, the inverse of per-segment ``Slice``/chunk
+    splitting.  With ``like`` set the flat result is reshaped to that
+    buffer's shape (segmented allgather returns each contribution in the
+    sender's shape; the MPI uniform-count contract makes the local
+    ``"in"`` a valid template)."""
+    out: Any
+    parts: Tuple[Any, ...]
+    like: Any = None
+
+    @property
+    def reads(self):
+        parts = tuple(self.parts)
+        return parts if self.like is None else parts + (self.like,)
 
     @property
     def writes(self):
@@ -385,7 +407,7 @@ class Schedule:
 
     # -- cost model ---------------------------------------------------------
     def cost(self, alpha: float, beta: float, size: float = 0.0, *,
-             gamma: float = 0.0) -> float:
+             gamma: float = 0.0, link=None) -> float:
         """Predicted makespan under the α-β(-γ) model.
 
         ``alpha`` — per-transfer latency (s); ``beta`` — wire time per byte
@@ -393,6 +415,13 @@ class Schedule:
         bytes (an op moving/combining ``frac`` of it costs
         ``β·frac·size`` / ``γ·frac·size``); ``gamma`` — combine time per
         byte (s/B; 0 = free combines, the textbook α-β model).
+
+        ``link`` optionally maps ``(src rank, dst rank)`` to that
+        transfer's ``(α, β)`` — the heterogeneous-machine model shared
+        with :func:`repro.core.simulate.schedule_tasks`; a two-tier link
+        makes hierarchical schedules pay cheap intra-pod and expensive
+        inter-pod constants, which is how :func:`best_schedule` compares
+        flat against hierarchical candidates apples-to-apples.
 
         One-port evaluation over the DAG: each rank's sends serialise in
         program order (send port busy α + β·b per transfer), so do its
@@ -420,13 +449,17 @@ class Schedule:
                     if isinstance(op, Recv):
                         if op.tag not in arrival:
                             break               # sender not launched yet
+                        a, bt = (alpha, beta) if link is None \
+                            else link(op.peer, r)
                         done = max(arrival[op.tag],
-                                   rport[r] + alpha + beta * op.frac * size)
+                                   rport[r] + a + bt * op.frac * size)
                         rport[r] = done
                         env[op.buf] = done
                     elif isinstance(op, Send):
+                        a, bt = (alpha, beta) if link is None \
+                            else link(r, op.peer)
                         ready = max(env[op.buf], port[r])
-                        done = ready + alpha + beta * op.frac * size
+                        done = ready + a + bt * op.frac * size
                         port[r] = done
                         arrival[op.tag] = done
                     elif isinstance(op, Combine):
@@ -443,6 +476,8 @@ class Schedule:
                             env[o] = env[op.src]
                     elif isinstance(op, Slice):
                         env[op.out] = env[op.src]
+                    elif isinstance(op, Concat):
+                        env[op.out] = max(env[b] for b in op.reads)
                     elif isinstance(op, Const):
                         env[op.out] = 0.0
                     else:               # pragma: no cover - new op kinds
@@ -776,19 +811,47 @@ def _allreduce_doubling(n: int) -> Schedule:
     return _fix_recv_order(sched).validate()
 
 
-def _allgather_ring(n: int) -> Schedule:
+def _allgather_ring(n: int, segments: int = 1) -> Schedule:
+    """Ring allgather; with ``segments=S > 1`` every contribution is
+    sliced into S segments forwarded as independent pipelined rings (the
+    store-and-forward segmentation), reassembled per source rank by a
+    trailing :class:`Concat` shaped like the local ``"in"``."""
     b = _B(n)
+    S = segments
+    if S == 1:
+        for r in range(n):
+            b.programs[r].append(Copy(("g", r), "in"))
+        for k in range(n - 1):
+            for r in range(n):
+                b.xfer(r, (r + 1) % n, ("g", (r - k) % n),
+                       ("m", k, (r + 1) % n))
+            for r in range(n):
+                b.programs[r].append(
+                    Copy(("g", (r - k - 1) % n), ("m", k, r)))
+        sched = Schedule(name="allgather", algorithm="ring", n=n,
+                         programs=tuple(tuple(p) for p in b.programs),
+                         input_kind="value", output_kind="list")
+        return _fix_recv_order(sched).validate()
     for r in range(n):
-        b.programs[r].append(Copy(("g", r), "in"))
+        for s in range(S):
+            b.programs[r].append(Slice(("gs", r, s), "in", S, s))
+    frac = 1.0 / S
     for k in range(n - 1):
-        for r in range(n):
-            b.xfer(r, (r + 1) % n, ("g", (r - k) % n),
-                   ("m", k, (r + 1) % n))
-        for r in range(n):
-            b.programs[r].append(Copy(("g", (r - k - 1) % n), ("m", k, r)))
+        for s in range(S):
+            for r in range(n):
+                b.xfer(r, (r + 1) % n, ("gs", (r - k) % n, s),
+                       ("m", k, s, (r + 1) % n), frac)
+            for r in range(n):
+                b.programs[r].append(
+                    Copy(("gs", (r - k - 1) % n, s), ("m", k, s, r)))
+    for r in range(n):
+        for i in range(n):
+            b.programs[r].append(
+                Concat(("g", i), tuple(("gs", i, s) for s in range(S)),
+                       like="in"))
     sched = Schedule(name="allgather", algorithm="ring", n=n,
                      programs=tuple(tuple(p) for p in b.programs),
-                     input_kind="value", output_kind="list")
+                     input_kind="value", output_kind="list", segments=S)
     return _fix_recv_order(sched).validate()
 
 
@@ -822,26 +885,42 @@ def _allgather_bruck(n: int) -> Schedule:
     return _fix_recv_order(sched).validate()
 
 
-def _reduce_scatter_ring(n: int) -> Schedule:
+def _reduce_scatter_ring(n: int, segments: int = 1) -> Schedule:
+    """Ring reduce-scatter; ``segments=S > 1`` pipelines exactly like the
+    segmented allreduce's reduce-scatter leg — the combine of segment
+    ``s`` overlaps the transport of segment ``s+1`` — and a trailing
+    :class:`Concat` reassembles each rank's owned chunk (bit-identical to
+    the unsegmented chunk: ``array_split`` composes with itself)."""
     b = _B(n)
-    cur: Dict[Tuple[int, int], Any] = {(r, i): ("c", i)
-                                       for r in range(n) for i in range(n)}
-    frac = 1.0 / n
+    S = segments
+    cur: Dict[Tuple[int, int, int], Any] = {}
+    for r in range(n):
+        for i in range(n):
+            for s in range(S):
+                cur[(r, i, s)] = ("c", i, s) if S > 1 else ("c", i)
+    frac = 1.0 / (n * S)
     for k in range(n - 1):
+        for s in range(S):
+            for r in range(n):
+                b.xfer(r, (r + 1) % n, cur[(r, (r - 1 - k) % n, s)],
+                       ("m", k, s, (r + 1) % n), frac)
+            for r in range(n):
+                i = (r - 2 - k) % n
+                nxt = ("a", k, s, i)
+                b.programs[r].append(
+                    Combine(nxt, cur[(r, i, s)], ("m", k, s, r), frac))
+                cur[(r, i, s)] = nxt
+    if S == 1:
+        out = tuple(cur[(r, r, 0)] for r in range(n))
+    else:
         for r in range(n):
-            b.xfer(r, (r + 1) % n, cur[(r, (r - 1 - k) % n)],
-                   ("m", k, (r + 1) % n), frac)
-        for r in range(n):
-            i = (r - 2 - k) % n
-            nxt = ("a", k, i)
             b.programs[r].append(
-                Combine(nxt, cur[(r, i)], ("m", k, r), frac))
-            cur[(r, i)] = nxt
-    out = tuple(cur[(r, r)] for r in range(n))
+                Concat(("rs", r), tuple(cur[(r, r, s)] for s in range(S))))
+        out = tuple(("rs", r) for r in range(n))
     sched = Schedule(name="reduce_scatter", algorithm="ring", n=n,
                      programs=tuple(tuple(p) for p in b.programs),
-                     input_kind="chunks", output_kind="buf",
-                     out_bufs=out, chunk_bufs=tuple(_chunk_names(n, 1)))
+                     input_kind="chunks", output_kind="buf", segments=S,
+                     out_bufs=out, chunk_bufs=tuple(_chunk_names(n, S)))
     return _fix_recv_order(sched).validate()
 
 
@@ -939,9 +1018,10 @@ def _build_cached(name: str, algorithm: str, n: int, root: int,
         raise ValueError(f"root {root} out of range for n={n}")
     if segments < 1:
         raise ValueError(f"segments must be >= 1, got {segments}")
-    if segments > 1 and (name, algorithm) != ("allreduce", "ring"):
+    if segments > 1 and not (algorithm == "ring" and name in (
+            "allreduce", "allgather", "reduce_scatter")):
         raise ValueError("segmented schedules are only defined for the "
-                         "ring allreduce")
+                         "ring allreduce/allgather/reduce_scatter")
     if n == 1:
         return _trivial(name, algorithm)
     if name == "barrier":
@@ -958,11 +1038,11 @@ def _build_cached(name: str, algorithm: str, n: int, root: int,
             return _allreduce_doubling(n)
         return _allreduce_ring(n, segments)
     if name == "allgather":
-        return (_allgather_bruck if algorithm == "doubling"
-                else _allgather_ring)(n)
+        return (_allgather_bruck(n) if algorithm == "doubling"
+                else _allgather_ring(n, segments))
     if name == "reduce_scatter":
-        return (_reduce_scatter_doubling if algorithm == "doubling"
-                else _reduce_scatter_ring)(n)
+        return (_reduce_scatter_doubling(n) if algorithm == "doubling"
+                else _reduce_scatter_ring(n, segments))
     return (_alltoall_bruck if algorithm == "doubling"
             else _alltoall_pairwise)(n)
 
@@ -1194,7 +1274,8 @@ def _hier_cached(intra: int, inter: int, inter_algorithm: str) -> Schedule:
 # ---------------------------------------------------------------------------
 # Calibrated constants (tools/calibrate.py output)
 # ---------------------------------------------------------------------------
-def load_calibration(path: Any = "CALIBRATION.json") -> Dict[str, float]:
+def load_calibration(path: Any = "CALIBRATION.json",
+                     family: Optional[str] = None) -> Dict[str, float]:
     """Read α/β/γ least-squares fitted by ``tools/calibrate.py``.
 
     Returns exactly ``{"alpha", "beta", "gamma"}`` — ready to splat into
@@ -1204,10 +1285,23 @@ def load_calibration(path: Any = "CALIBRATION.json") -> Dict[str, float]:
     constants.  (The calibration file also carries a per-call
     ``overhead`` term the fit absorbs; schedule costs deliberately
     exclude it.)
+
+    ``family`` selects one of the per-family fits (``"inter"`` is the
+    inter-pod transport measured by the butterfly legs of
+    ``benchmarks/overlap_bench.py`` — the constants the two-tier
+    hierarchical candidate of :func:`best_schedule` pays for cross-pod
+    hops); ``None`` keeps the top-level global fit.  Raises ``KeyError``
+    when the requested family has not been calibrated yet.
     """
     import json
     import pathlib
     data = json.loads(pathlib.Path(path).read_text())
+    if family is not None:
+        fams = data.get("families", {})
+        if family not in fams:
+            raise KeyError(f"no calibrated family {family!r} in {path} "
+                           f"(have {sorted(fams)})")
+        data = fams[family]
     return {k: float(data[k]) for k in ("alpha", "beta", "gamma")}
 
 
@@ -1217,7 +1311,9 @@ def load_calibration(path: Any = "CALIBRATION.json") -> Dict[str, float]:
 def best_schedule(name: str, n: int, size: float, *, alpha: float,
                   beta: float, gamma: float = 0.0, root: int = 0,
                   segment_choices: Sequence[int] = (1, 2, 4, 8),
-                  ) -> Schedule:
+                  intra: Optional[int] = None,
+                  inter_alpha: Optional[float] = None,
+                  inter_beta: Optional[float] = None) -> Schedule:
     """Pick algorithm AND segment count by minimum predicted cost.
 
     The α-β replacement for choosing by bare round counts: latency-bound
@@ -1227,22 +1323,54 @@ def best_schedule(name: str, n: int, size: float, *, alpha: float,
     against transport.  Selections are cached (the cost() DAG walks are
     pure Python): a per-iteration ``algorithm="auto"`` collective pays
     the evaluation once, not once per rank per posting.
+
+    ``intra`` declares a pod structure (``intra`` consecutive ranks per
+    pod): every candidate is then costed under a **two-tier link** —
+    intra-pod hops pay (``alpha``, ``beta``), cross-pod hops pay
+    (``inter_alpha``, ``inter_beta``; calibrate via
+    ``load_calibration(path, family="inter")``, defaulting to the base
+    constants) — and for the allreduce the composed
+    :func:`build_hierarchical` schedule joins the candidate set, so a
+    pod-aware machine picks the hierarchical schedule exactly when the
+    inter constants make flat rings lose.
     """
+    if intra is not None:
+        intra = int(intra)
+        if intra < 2 or n % intra or n // intra < 2:
+            intra = None        # no real pod structure at this size
     return _best_cached(name, int(n), float(size), float(alpha),
                         float(beta), float(gamma), int(root),
-                        tuple(int(s) for s in segment_choices))
+                        tuple(int(s) for s in segment_choices), intra,
+                        None if inter_alpha is None else float(inter_alpha),
+                        None if inter_beta is None else float(inter_beta))
 
 
 @functools.lru_cache(maxsize=1024)
 def _best_cached(name: str, n: int, size: float, alpha: float, beta: float,
                  gamma: float, root: int,
-                 segment_choices: Tuple[int, ...]) -> Schedule:
+                 segment_choices: Tuple[int, ...],
+                 intra: Optional[int] = None,
+                 inter_alpha: Optional[float] = None,
+                 inter_beta: Optional[float] = None) -> Schedule:
     candidates: List[Schedule] = []
     for alg in ALGORITHMS:
         candidates.append(build(name, alg, n, root=root))
-        if (name, alg) == ("allreduce", "ring"):
+        if alg == "ring" and name in ("allreduce", "allgather",
+                                      "reduce_scatter"):
             for s in segment_choices:
                 if s > 1:
-                    candidates.append(build(name, alg, n, segments=s))
+                    candidates.append(build(name, alg, n, root=root,
+                                            segments=s))
+    link = None
+    if intra is not None:
+        if name == "allreduce":
+            candidates.append(build_hierarchical(intra, n // intra))
+        ia = alpha if inter_alpha is None else inter_alpha
+        ib = beta if inter_beta is None else inter_beta
+
+        def link(src, dst):
+            return (alpha, beta) if src // intra == dst // intra \
+                else (ia, ib)
     return min(candidates,
-               key=lambda s: s.cost(alpha, beta, size, gamma=gamma))
+               key=lambda s: s.cost(alpha, beta, size, gamma=gamma,
+                                    link=link))

@@ -439,8 +439,8 @@ def schedule_tasks(sched, *, size: float, alpha: float, beta: float,
     starting at ``base_id``; feed them to :class:`Simulator`
     (``n_ranks=sched.n``), possibly merged with other graphs.
     """
-    from .schedule import Combine, Const, Copy, Pack, Recv, Send, Slice, \
-        Unpack
+    from .schedule import Combine, Concat, Const, Copy, Pack, Recv, Send, \
+        Slice, Unpack
 
     tasks: List[SimTask] = []
     ids = itertools.count(base_id)
@@ -505,6 +505,11 @@ def schedule_tasks(sched, *, size: float, alpha: float, beta: float,
                         deps[o] = set(deps[op.src])
                 elif isinstance(op, Slice):
                     deps[op.out] = set(deps[op.src])
+                elif isinstance(op, Concat):
+                    merged = set()
+                    for p in op.reads:
+                        merged |= deps[p]
+                    deps[op.out] = merged
                 elif isinstance(op, Const):
                     deps[op.out] = {entry[r]}
                 else:           # pragma: no cover - new op kinds

@@ -17,6 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import collective_stages as _stages
 from . import ref
 from .flash_attention import flash_attention as _flash_pallas
 from .mamba2_ssd import mamba2_ssd as _ssd_pallas
@@ -113,6 +114,61 @@ def moe_gmm(x, w, *, impl: Optional[str] = None, **blocks) -> jax.Array:
             E, C, w.shape[-1])
     return _gmm_pallas(x, w, interpret=(impl == "pallas_interpret"),
                        **blocks)
+
+
+# ---------------------------------------------------------------------------
+# Fused collective stages (the Level-B executor tier; see
+# repro.kernels.collective_stages and repro.core.lowering stage_impl=)
+# ---------------------------------------------------------------------------
+def combine_stage(acc, got, scale=None, *, accumulate: bool = True,
+                  impl: Optional[str] = None) -> jax.Array:
+    """Fused reduce-scatter combine: ``acc + dequant(got)`` in one pass.
+
+    ``got`` may be in a narrower wire dtype (bf16, or int8 with
+    ``scale``); ``accumulate=False`` is the allgather-leg chunk install.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.combine_stage(acc, got, scale, accumulate=accumulate)
+    return _stages.fused_combine(acc, got, scale, accumulate=accumulate,
+                                 interpret=(impl == "pallas_interpret"))
+
+
+def quantize_stage(x, *, impl: Optional[str] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 wire quantisation; returns ``(q, scale)``.
+
+    The scalar ``max|x|/127`` reduction happens in XLA (one read); the
+    round/clip/cast store is the fused single-pass kernel.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))),
+                        1e-20) / 127.0
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.quantize_stage(x, scale), scale
+    return _stages.quantize_wire(
+        x, scale, interpret=(impl == "pallas_interpret")), scale
+
+
+def dequantize_stage(q, scale, dtype=jnp.float32, *,
+                     impl: Optional[str] = None) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.dequantize_stage(q, scale, dtype)
+    return _stages.dequantize_wire(q, scale, dtype,
+                                   interpret=(impl == "pallas_interpret"))
+
+
+def gs_stencil(block, top, left, bottom, right, *,
+               impl: Optional[str] = None):
+    """Fused Gauss–Seidel block stage: 4-point update, L1 residual and
+    the four outgoing boundary edges in one pass over the block.
+    Returns ``(new_block, residual, (top, bottom, left, right))``."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.gs_stencil(block, top, left, bottom, right)
+    return _stages.gs_stencil(block, top, left, bottom, right,
+                              interpret=(impl == "pallas_interpret"))
 
 
 # Pure-jnp layers with no Pallas variant (documented in DESIGN.md):

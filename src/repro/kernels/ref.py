@@ -517,3 +517,50 @@ def gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
     w_rows = w[eid]                       # (T, K, N) — gather (oracle only)
     return jnp.einsum("tk,tkn->tn", x.astype(jnp.float32),
                       w_rows.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Collective-stage oracles (fused combine / wire cast / Gauss–Seidel block)
+# ---------------------------------------------------------------------------
+def combine_stage(acc, got, scale=None, *, accumulate: bool = True):
+    """Oracle for :func:`repro.kernels.collective_stages.fused_combine`:
+    ``acc + dequant(got)`` (or just the dequant with ``accumulate=False``)
+    as plain jnp — what the unfused Level-B path computes across separate
+    elementwise stages."""
+    if scale is None:
+        got = got.astype(acc.dtype)
+    else:
+        got = (got.astype(jnp.float32) * scale).astype(acc.dtype)
+    return acc + got if accumulate else got
+
+
+def quantize_stage(x, scale):
+    """Symmetric int8 quantisation oracle (round, clip, cast)."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def dequantize_stage(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def gs_stencil(block, top, left, bottom, right):
+    """Oracle for the fused Gauss–Seidel block stage: 4-point update,
+    L1 residual and boundary edges, mirroring
+    ``benchmarks/gauss_seidel.gs_block`` plus its residual/edge reads."""
+    b = block.astype(jnp.float32)
+    H, W = b.shape
+    up = jnp.concatenate([top.reshape(1, W).astype(jnp.float32),
+                          b[:-1, :]], axis=0)
+    down = jnp.concatenate([b[1:, :],
+                            bottom.reshape(1, W).astype(jnp.float32)],
+                           axis=0)
+    lft = jnp.concatenate([left.reshape(H, 1).astype(jnp.float32),
+                           b[:, :-1]], axis=1)
+    rgt = jnp.concatenate([b[:, 1:],
+                           right.reshape(H, 1).astype(jnp.float32)],
+                          axis=1)
+    new = 0.25 * (up + down + lft + rgt)
+    res = jnp.sum(jnp.abs(new - b))
+    new = new.astype(block.dtype)
+    return new, res, (new[0, :], new[-1, :], new[:, 0], new[:, -1])

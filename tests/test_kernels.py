@@ -220,3 +220,80 @@ def test_mlstm_kernel_vs_sequential(b, s, h, d, chunk, dtype):
                                rtol=2e-2)
     np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref),
                                atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused collective-stage kernels (Pallas executor tier)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m", [64, 257, 1031, 4096])   # incl. odd sizes
+@pytest.mark.parametrize("wire", ["fp32", "bf16", "int8"])
+def test_fused_combine_stage_parity(m, wire):
+    rng = np.random.default_rng(m)
+    acc = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    got32 = jnp.asarray(rng.standard_normal(m), jnp.float32)
+    if wire == "fp32":
+        got, scale = got32, None
+    elif wire == "bf16":
+        got, scale = got32.astype(jnp.bfloat16), None
+    else:
+        got, scale = ops.quantize_stage(got32, impl="ref")
+    want = ref.combine_stage(acc, got, scale)
+    fused = ops.combine_stage(acc, got, scale, impl="pallas_interpret")
+    assert fused.dtype == want.dtype == jnp.float32
+    if wire == "int8":
+        # the dequant multiply-add may contract to an FMA inside the
+        # kernel but not in the XLA oracle — 1 ULP of fp32 slack
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                                   atol=2e-6)
+    else:
+        # fp32 (and the widening bf16 cast) must be bit-identical
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(want))
+    inst = ops.combine_stage(acc, got, scale, accumulate=False,
+                             impl="pallas_interpret")
+    want_inst = ref.combine_stage(acc, got, scale, accumulate=False)
+    if wire == "int8":
+        np.testing.assert_allclose(np.asarray(inst), np.asarray(want_inst),
+                                   atol=2e-6)
+    else:
+        np.testing.assert_array_equal(np.asarray(inst),
+                                      np.asarray(want_inst))
+
+
+@pytest.mark.parametrize("m", [63, 640, 2049])
+def test_quantize_dequantize_stage_parity(m):
+    rng = np.random.default_rng(m)
+    x = jnp.asarray(rng.standard_normal(m) * 11.0, jnp.float32)
+    q, scale = ops.quantize_stage(x, impl="pallas_interpret")
+    q_ref, scale_ref = ops.quantize_stage(x, impl="ref")
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_array_equal(np.asarray(scale), np.asarray(scale_ref))
+    assert q.dtype == jnp.int8
+    deq = ops.dequantize_stage(q, scale, impl="pallas_interpret")
+    np.testing.assert_array_equal(
+        np.asarray(deq), np.asarray(ref.dequantize_stage(q, scale,
+                                                         jnp.float32)))
+    # round-trip error bounded by the uniform quantization step
+    step = float(scale)
+    assert np.max(np.abs(np.asarray(deq) - np.asarray(x))) <= step
+
+
+@pytest.mark.parametrize("H,W", [(16, 16), (8, 32), (17, 5)])
+def test_gs_stencil_kernel_parity(H, W):
+    rng = np.random.default_rng(H * W)
+    block = jnp.asarray(rng.standard_normal((H, W)), jnp.float32)
+    top = jnp.asarray(rng.standard_normal(W), jnp.float32)
+    bottom = jnp.asarray(rng.standard_normal(W), jnp.float32)
+    left = jnp.asarray(rng.standard_normal(H), jnp.float32)
+    right = jnp.asarray(rng.standard_normal(H), jnp.float32)
+    new, res, edges = ops.gs_stencil(block, top, left, bottom, right,
+                                     impl="pallas_interpret")
+    new_r, res_r, edges_r = ref.gs_stencil(block, top, left, bottom, right)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(new_r))
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(res_r))
+    for e, er in zip(edges, edges_r):
+        np.testing.assert_array_equal(np.asarray(e), np.asarray(er))
+    # the edge tuple is (top, bottom, left, right) rows of the NEW block
+    np.testing.assert_array_equal(np.asarray(edges[0]),
+                                  np.asarray(new)[0])
+    np.testing.assert_array_equal(np.asarray(edges[3]),
+                                  np.asarray(new)[:, -1])

@@ -370,3 +370,118 @@ else:
     raise AssertionError("expected ValueError for one axis")
 print("SYNC-GRADS-HIER-OK")
 """)
+
+
+def test_stage_impl_fused_ring_bit_parity_and_wire_counts():
+    """The fused-stage ring (stage_impl=) is bit-identical to the legacy
+    combine path and keeps the ppermute count; a bf16 wire keeps the
+    count (pure cast), an int8 wire doubles it (payload + scale)."""
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.launch.mesh import make_mesh
+from repro.core import lowering
+from repro.core import schedule as schedule_ir
+
+mesh = make_mesh((8,), ("data",))
+x = jax.random.normal(jax.random.PRNGKey(7), (8, 1000))
+want = np.asarray(jnp.sum(x, axis=0))
+
+def lower(alg, seg, stage_impl=None, wire=None):
+    def f(xl):
+        return lowering.allreduce(xl.reshape(-1), ("data",), algorithm=alg,
+                                  segments=seg, stage_impl=stage_impl,
+                                  wire=wire)
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"),
+                             out_specs=P(), axis_names={"data"},
+                             check_vma=False))
+
+for alg, seg in (("ring", 1), ("ring", 4), ("doubling", 1)):
+    base = lower(alg, seg)
+    fused = lower(alg, seg, stage_impl="pallas_interpret")
+    got_b = np.asarray(base(x.reshape(-1)))
+    got_f = np.asarray(fused(x.reshape(-1)))
+    assert np.array_equal(got_b, got_f), (alg, seg)   # bit parity, fp32
+    sched = schedule_ir.build("allreduce", alg, 8, segments=seg)
+    n_base = base.lower(x.reshape(-1)).as_text().count("collective_permute")
+    n_fused = fused.lower(x.reshape(-1)).as_text().count(
+        "collective_permute")
+    assert n_base == n_fused == lowering.sends_per_rank(sched), (alg, seg)
+
+ring = schedule_ir.build("allreduce", "ring", 8)
+for wire, factor, tol in (("bf16", 1, 2e-2), ("int8", 2, 5e-2)):
+    f = lower("ring", 1, stage_impl="pallas_interpret", wire=wire)
+    got = np.asarray(f(x.reshape(-1)))
+    rel = np.max(np.abs(got - want)) / np.max(np.abs(want))
+    assert rel < tol, (wire, rel)
+    n_pp = f.lower(x.reshape(-1)).as_text().count("collective_permute")
+    # int8 forwards a scale alongside every payload permute
+    rs = 7                       # reduce-scatter rounds (n-1)
+    expect = lowering.sends_per_rank(ring) + (rs + 7) * (factor - 1)
+    assert n_pp == expect, (wire, n_pp, expect)
+print("stage parity OK")
+""")
+
+
+def test_stage_impl_option_validation():
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import lowering
+for bad in (dict(algorithm="native", stage_impl="ref"),
+            dict(algorithm="native", wire="bf16"),
+            dict(algorithm="doubling", stage_impl="ref", wire="bf16"),
+            dict(algorithm="ring", wire="bf16")):        # wire w/o stage
+    try:
+        lowering.allreduce(jnp.zeros(8), ("data",), **bad)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError(f"accepted {bad}")
+try:
+    lowering.allreduce(jnp.zeros(8), ("data",), algorithm="ring",
+                       stage_impl="nope")
+except ValueError:
+    pass
+else:
+    raise AssertionError("accepted bogus stage_impl")
+print("validation OK")
+""")
+
+
+def test_sync_grads_stage_tier_passthrough():
+    """sync_grads(stage_impl=) is bit-identical to the plain ring path;
+    stage_wire="bf16" narrows the wire within bf16 tolerance; combining
+    compress="int8" with the stage tier is rejected."""
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.launch.mesh import make_mesh
+from repro.core import overlap
+
+mesh = make_mesh((8,), ("data",))
+g = {"w": jax.random.normal(jax.random.PRNGKey(3), (8, 64, 17))}
+
+def run(**kw):
+    def f(gl):
+        return overlap.sync_grads(gl, axes=("data",), algorithm="ring",
+                                  mean=False, **kw)
+    sf = jax.jit(shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                           axis_names={"data"}, check_vma=False))
+    return np.asarray(sf(g)["w"])
+
+base = run()
+assert np.array_equal(base, run(stage_impl="pallas_interpret"))
+want = np.asarray(jnp.sum(g["w"], axis=0))
+rel = np.max(np.abs(run(stage_impl="pallas_interpret", stage_wire="bf16")
+                    - want)) / np.max(np.abs(want))
+assert rel < 2e-2, rel
+try:
+    run(compress="int8", stage_impl="pallas_interpret")
+except ValueError:
+    pass
+else:
+    raise AssertionError("compress=int8 + stage tier accepted")
+print("sync_grads stage OK")
+""")

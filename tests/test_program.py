@@ -390,3 +390,56 @@ def test_wait_plan_matches_dynamic_interpretation(name, algorithm):
                  if isinstance(op, Recv)]
         consumed = [b for _, ws in steps for b in ws] + list(tail)
         assert sorted(map(repr, recvs)) == sorted(map(repr, consumed))
+
+
+# ---------------------------------------------------------------------------
+# persistent-plan buffer arenas: combine outputs write into pre-allocated
+# per-rank buffers (ufunc out=), reused across postings of the same plan
+# ---------------------------------------------------------------------------
+def test_persistent_arena_reuses_combine_buffers():
+    vals = [np.arange(16.0) + r for r in range(4)]
+    want = np.sum(vals, axis=0)
+    coll = Collectives(tac.CommWorld(4), executor="compiled")
+    pers = coll.persistent("allreduce", algorithm="ring")
+    for r in pers.run_group(vals):
+        np.testing.assert_array_equal(r, want)
+    assert any(pers._arenas), \
+        "compiled ring allreduce should populate combine arenas"
+    snap = [{k: id(v) for k, v in a.items()} for a in pers._arenas]
+    for _ in range(10):
+        for r in pers.run_group(vals):
+            np.testing.assert_array_equal(r, want)
+    # steady state: the very same buffer objects, and no growth (a new
+    # entry or a reallocated id per iteration would be the leak).
+    assert [{k: id(v) for k, v in a.items()} for a in pers._arenas] == snap
+
+
+def test_persistent_arena_results_do_not_alias_buffers():
+    n = 4
+    vals1 = [np.full(12, float(r + 1)) for r in range(n)]
+    vals2 = [np.full(12, float(10 * (r + 1))) for r in range(n)]
+    for name in ("allreduce", "reduce"):
+        coll = Collectives(tac.CommWorld(n), executor="compiled")
+        pers = coll.persistent(name)
+        out1 = pers.run_group(vals1)
+        pers.run_group(vals2)
+        # iteration 2 rewrote the arena buffers in place; iteration-1
+        # results must be unaffected and share no memory with them.
+        want1 = np.sum(vals1, axis=0)
+        for res in out1:
+            if res is None:        # reduce non-root
+                continue
+            np.testing.assert_array_equal(res, want1)
+            for a in pers._arenas:
+                for buf in a.values():
+                    assert not np.shares_memory(res, buf)
+
+
+def test_persistent_arena_survives_dtype_switch():
+    coll = Collectives(tac.CommWorld(4), executor="compiled")
+    pers = coll.persistent("allreduce", algorithm="ring")
+    ints = [np.arange(8) + r for r in range(4)]
+    flts = [np.arange(8.0) + r for r in range(4)]
+    for vals in (ints, flts, ints):
+        for r in pers.run_group(vals):
+            np.testing.assert_array_equal(r, np.sum(vals, axis=0))

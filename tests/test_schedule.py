@@ -709,3 +709,112 @@ def test_hierarchical_rejects_segments_at_both_levels():
     with pytest.raises(ValueError, match="segments"):
         overlap.sync_grads({"w": np.zeros(4)}, axes=("pod", "data"),
                            hierarchical=True, segments=4)
+
+
+# ---------------------------------------------------------------------------
+# segmented allgather / reduce_scatter rings (Concat reassembly)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("segments", [2, 4])
+@pytest.mark.parametrize("executor", ["interpreted", "compiled"])
+def test_segmented_allgather_and_reduce_scatter_parity(segments, executor):
+    n = 5
+    vals = [np.arange(23.0).reshape(1, 23) + 7 * r for r in range(n)]
+    coll = Collectives(tac.CommWorld(n), executor=executor)
+    base_ag = coll.run_group("allgather", [{"value": v} for v in vals])
+    seg_ag = coll.run_group(
+        "allgather", [{"value": v, "segments": segments} for v in vals])
+    for r in range(n):
+        for i in range(n):
+            got = np.asarray(seg_ag[r][i])
+            assert got.shape == vals[i].shape        # reshaped like "in"
+            np.testing.assert_array_equal(got, np.asarray(base_ag[r][i]))
+    base_rs = coll.run_group("reduce_scatter", [{"value": v} for v in vals])
+    seg_rs = coll.run_group(
+        "reduce_scatter", [{"value": v, "segments": segments} for v in vals])
+    for r in range(n):
+        # Concat of the array_split segments is bit-identical to the
+        # unsegmented chunk (split composes with itself).
+        np.testing.assert_array_equal(seg_rs[r], base_rs[r])
+
+
+def test_segmented_rs_pipelines_in_cost_model_and_simulator():
+    n, size = 8, float(1 << 24)
+    gamma = 8e-10                  # combine-heavy: segmentation must win
+    base = build("reduce_scatter", "ring", n)
+    seg = build("reduce_scatter", "ring", n, segments=4)
+    assert seg.cost(ALPHA, BETA, size, gamma=gamma) < \
+        base.cost(ALPHA, BETA, size, gamma=gamma)
+    # the discrete-event replay agrees (transport of segment k+1 overlaps
+    # the combine of segment k)
+    mk = lambda s: simulate.schedule_makespan(
+        s, size=size, alpha=ALPHA, beta=BETA, gamma=gamma)
+    assert mk(seg) < mk(base)
+
+
+def test_best_schedule_selects_segments_for_bulk_reduce_scatter():
+    s = best_schedule("reduce_scatter", 8, float(1 << 24),
+                      alpha=ALPHA, beta=BETA, gamma=1e-9)
+    assert (s.algorithm, s.name) == ("ring", "reduce_scatter")
+    assert s.segments > 1
+    # latency-bound payloads keep the unsegmented log-round schedule
+    s = best_schedule("allgather", 8, 64.0, alpha=1e-5, beta=BETA)
+    assert s.segments == 1
+
+
+def test_segmented_builds_rejected_for_unsupported_pairs():
+    with pytest.raises(ValueError):
+        build("alltoall", "ring", 4, segments=2)
+    with pytest.raises(ValueError):
+        build("allgather", "doubling", 4, segments=2)
+    coll = Collectives(tac.CommWorld(4))
+    with pytest.raises(ValueError):
+        coll.run_group("allgather", [{"value": np.arange(4.0),
+                                      "segments": 2}] * 4,
+                       algorithm="doubling")
+
+
+# ---------------------------------------------------------------------------
+# two-tier auto selection (hierarchical candidates under a pod-aware link)
+# ---------------------------------------------------------------------------
+def test_two_tier_cost_and_hierarchical_auto_selection():
+    size = float(1 << 22)
+    ring = build("allreduce", "ring", 8)
+    # an expensive cross-pod link must make the flat ring cost MORE than
+    # under uniform constants (7 of its 8 hops stay intra, 1 crosses)
+    def link(src, dst):
+        return (ALPHA, BETA) if src // 4 == dst // 4 else (5e-4, 3e-7)
+    assert ring.cost(ALPHA, BETA, size, link=link) > \
+        ring.cost(ALPHA, BETA, size)
+    picked = best_schedule("allreduce", 8, size, alpha=ALPHA, beta=BETA,
+                           intra=4, inter_alpha=5e-4, inter_beta=3e-7)
+    assert picked.algorithm == "hierarchical"
+    assert picked.axes == (("inter", 2), ("intra", 4))
+    # degenerate pod structures fall back to the flat candidate set
+    flat = best_schedule("allreduce", 8, size, alpha=ALPHA, beta=BETA,
+                         intra=8)
+    assert flat.algorithm != "hierarchical"
+
+
+def test_collectives_auto_with_hierarchy_runs_hierarchical():
+    n = 8
+    vals = [np.arange(32.0) + r for r in range(n)]
+    coll = Collectives(tac.CommWorld(n), alpha=1e-6, beta=1e-9,
+                       hierarchy=4, inter_alpha=5e-4, inter_beta=3e-7)
+    sched = coll._resolve("allreduce", "auto",
+                          nbytes=float(1 << 22))
+    assert sched.algorithm == "hierarchical"
+    out = coll.run_group("allreduce", [{"value": v} for v in vals],
+                         algorithm="auto")
+    for r in range(n):
+        np.testing.assert_array_equal(out[r], np.sum(vals, axis=0))
+    with pytest.raises(ValueError):
+        Collectives(tac.CommWorld(6), hierarchy=4)   # 4 does not divide 6
+
+
+def test_load_calibration_families():
+    consts = schedule_ir.load_calibration("CALIBRATION.json",
+                                          family="level_a")
+    assert set(consts) == {"alpha", "beta", "gamma"}
+    with pytest.raises(KeyError):
+        schedule_ir.load_calibration("CALIBRATION.json",
+                                     family="no-such-family")

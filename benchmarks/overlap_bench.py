@@ -782,6 +782,13 @@ def bench(print_fn=print, smoke: bool = False,
         "unsegmented_s": un.cost(ALPHA, BETA, grad_bytes, gamma=GAMMA),
         "segments4_s": seg.cost(ALPHA, BETA, grad_bytes, gamma=GAMMA),
     }
+    # the row namespaces this bench owns: tools/calibrate.py --gate
+    # limits the missing-baseline-row check to these, so rows other
+    # benches contribute to the shared baseline (serve.*) don't fail
+    # an overlap-only run.
+    report["gate_scope"] = ["modes", "hierarchical", "stages",
+                           "lowered_stages", "inter", "level_a",
+                           "progress"]
     pathlib.Path(json_path).write_text(json.dumps(report, indent=2))
     rows.append(("gradsync_predict_json", 0.0, json_path))
     for r in rows:

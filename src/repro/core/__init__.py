@@ -24,12 +24,15 @@ from . import simulate
 from . import collectives
 from . import lowering
 from . import overlap
+from . import options
 from . import resilience
 from .schedule import Schedule, build_neighbor, best_schedule
 from .collectives import (Collectives, CollectiveHandle, HaloExchange,
                           HierarchicalCollectives, PersistentCollective)
+from .options import CollectiveOptions
 from .tac import (CommWorld, CommGroup, CartGroup, DistGraphGroup,
-                  RankFailedError, CommRevokedError)
+                  RankFailedError, CommRevokedError, AsyncHandle,
+                  as_handle)
 from .resilience import FaultInjector
 
 __all__ = [
@@ -47,6 +50,8 @@ __all__ = [
     "EventCounter", "current_task",
     # TAMPI analogue + task-aware collectives
     "tac", "simulate", "collectives", "Collectives", "CollectiveHandle",
+    # unified async-handle protocol + consolidated tuning spec
+    "AsyncHandle", "as_handle", "options", "CollectiveOptions",
     # schedule IR + its two executors
     "schedule", "lowering", "overlap", "Schedule", "build_neighbor",
     "best_schedule",

@@ -83,6 +83,7 @@ import numpy as np
 from . import tac
 from . import program as program_ir
 from . import schedule as schedule_ir
+from .options import CollectiveOptions, renamed_kwarg
 from .program import bind_inputs as _bind_inputs
 from .schedule import (Combine, Concat, Const, Copy, Pack, Recv, Schedule,
                        Send, Slice, Unpack)
@@ -590,9 +591,18 @@ class Collectives:
     def __init__(self, comm, *, alpha: float = 1e-6, beta: float = 1e-9,
                  gamma: float = 0.0, calibration: Any = None,
                  executor: str = "compiled",
+                 hierarchical: Optional[int] = None,
                  hierarchy: Optional[int] = None,
                  inter_alpha: Optional[float] = None,
-                 inter_beta: Optional[float] = None) -> None:
+                 inter_beta: Optional[float] = None,
+                 options: Optional[CollectiveOptions] = None) -> None:
+        # `hierarchy=` is the pre-CollectiveOptions spelling of the pod
+        # size; the per-call kwarg was always `hierarchical=`, so the
+        # constructor now matches it (one spelling everywhere).
+        hierarchical = renamed_kwarg("hierarchy", hierarchy,
+                                     "hierarchical", hierarchical)
+        if options is not None:
+            [hierarchical] = options.take(hierarchical=hierarchical)
         self.executor = _norm_executor(executor)
         self.comm = comm
         self.world = comm   # historical alias (pre-sub-communicator name)
@@ -623,15 +633,15 @@ class Collectives:
                 else:
                     self.inter_alpha = inter["alpha"]
                     self.inter_beta = inter["beta"]
-        # Pod structure for algorithm="auto": `hierarchy` consecutive
+        # Pod structure for algorithm="auto": `hierarchical` consecutive
         # ranks form a pod; auto then also considers the composed
         # hierarchical allreduce and costs EVERY candidate under the
         # two-tier link (see schedule.best_schedule).
-        self.hierarchy = int(hierarchy) if hierarchy else None
+        self.hierarchy = int(hierarchical) if hierarchical else None
         if self.hierarchy is not None and (
                 self.hierarchy < 1 or comm.size % self.hierarchy):
-            raise ValueError(f"hierarchy pod size {hierarchy} must divide "
-                             f"the communicator size {comm.size}")
+            raise ValueError(f"hierarchical pod size {hierarchical} must "
+                             f"divide the communicator size {comm.size}")
         self._seq = [itertools.count() for _ in range(comm.size)]
 
     # -- plumbing ----------------------------------------------------------
@@ -740,26 +750,36 @@ class Collectives:
     # (latency-optimal doubling for the rooted/small ops, bandwidth-optimal
     # ring for the bulk ones) — shared with run_group so the two entry
     # points can never drift apart.  algorithm="auto" picks by α-β cost.
+    # Every method additionally accepts options=CollectiveOptions(...) —
+    # the consolidated tuning spec (repro.core.options); explicit kwargs
+    # override its fields, and fields an op cannot honour raise.
     def barrier(self, *, rank: int, algorithm: Optional[str] = None,
-                mode: str = "blocking", key: Any = None):
+                mode: str = "blocking", key: Any = None,
+                options: Optional[CollectiveOptions] = None):
+        [algorithm] = CollectiveOptions.merge(options, algorithm=algorithm)
         return self._run("barrier", algorithm, rank, key, mode)
 
     def bcast(self, value: Any = None, *, rank: int, root: int = 0,
               algorithm: Optional[str] = None, mode: str = "blocking",
-              key: Any = None):
+              key: Any = None,
+              options: Optional[CollectiveOptions] = None):
+        [algorithm] = CollectiveOptions.merge(options, algorithm=algorithm)
         return self._run("bcast", algorithm, rank, key, mode,
                          value=value, root=root)
 
     def reduce(self, value: Any, *, rank: int, op="sum", root: int = 0,
                algorithm: Optional[str] = None, mode: str = "blocking",
-               key: Any = None):
+               key: Any = None,
+               options: Optional[CollectiveOptions] = None):
+        [algorithm] = CollectiveOptions.merge(options, algorithm=algorithm)
         return self._run("reduce", algorithm, rank, key, mode,
                          value=np.asarray(value), op=_op_fn(op), root=root)
 
     def allreduce(self, value: Any, *, rank: int, op="sum",
                   algorithm: Optional[str] = None, mode: str = "blocking",
                   key: Any = None, segments: int = 1,
-                  hierarchical: Optional[int] = None):
+                  hierarchical: Optional[int] = None,
+                  options: Optional[CollectiveOptions] = None):
         """``segments > 1`` runs the pipelined ring allreduce (combine of
         segment *k* overlaps transport of segment *k+1*).
         ``hierarchical=intra`` runs the composed two-axis schedule
@@ -767,6 +787,9 @@ class Collectives:
         reduce-scatter, inter doubling, intra ring allgather) with
         ``intra`` consecutive ranks per pod; ``intra`` must divide the
         communicator size."""
+        algorithm, segments, hierarchical = CollectiveOptions.merge(
+            options, algorithm=algorithm, segments=segments,
+            hierarchical=hierarchical)
         if segments > 1:
             algorithm = algorithm or "ring"
             if _norm_alg(algorithm) != "ring":
@@ -778,13 +801,16 @@ class Collectives:
 
     def allgather(self, value: Any, *, rank: int,
                   algorithm: Optional[str] = None, mode: str = "blocking",
-                  key: Any = None, segments: int = 1):
+                  key: Any = None, segments: int = 1,
+                  options: Optional[CollectiveOptions] = None):
         """Returns the list of every rank's contribution, rank order.
 
         ``segments > 1`` runs the segmented ring (contributions sliced
         into pipelined sub-rings); it requires array payloads of one
         common shape (the MPI uniform-count contract) and returns each
         contribution as an array of that shape."""
+        algorithm, segments = CollectiveOptions.merge(
+            options, algorithm=algorithm, segments=segments)
         if segments > 1:
             algorithm = algorithm or "ring"
             if _norm_alg(algorithm) != "ring":
@@ -797,11 +823,14 @@ class Collectives:
     def reduce_scatter(self, value: Any, *, rank: int, op="sum",
                        algorithm: Optional[str] = None,
                        mode: str = "blocking", key: Any = None,
-                       segments: int = 1):
+                       segments: int = 1,
+                       options: Optional[CollectiveOptions] = None):
         """Returns this rank's ``np.array_split`` chunk of the flattened
         element-wise reduction.  ``segments > 1`` pipelines the ring
         (combine of segment *k* overlaps transport of segment *k+1*);
         the returned chunk is bit-identical to the unsegmented one."""
+        algorithm, segments = CollectiveOptions.merge(
+            options, algorithm=algorithm, segments=segments)
         if segments > 1:
             algorithm = algorithm or "ring"
             if _norm_alg(algorithm) != "ring":
@@ -813,9 +842,11 @@ class Collectives:
 
     def alltoall(self, blocks: Sequence[Any], *, rank: int,
                  algorithm: Optional[str] = None, mode: str = "blocking",
-                 key: Any = None):
+                 key: Any = None,
+                 options: Optional[CollectiveOptions] = None):
         """``blocks[d]`` goes to rank ``d``; returns blocks received,
         indexed by source rank."""
+        [algorithm] = CollectiveOptions.merge(options, algorithm=algorithm)
         blocks = list(blocks)
         if len(blocks) != self.world.size:
             raise ValueError(f"alltoall needs exactly {self.world.size} "
@@ -850,8 +881,9 @@ class Collectives:
 
     # -- persistent collectives (MPI_*_init analogue) ----------------------
     def persistent(self, name: str, *, algorithm: Optional[str] = None,
-                   op="sum", root: int = 0,
-                   segments: int = 1) -> "PersistentCollective":
+                   op="sum", root: int = 0, segments: int = 1,
+                   options: Optional[CollectiveOptions] = None
+                   ) -> "PersistentCollective":
         """Pre-build a collective schedule for repeated posting.
 
         The ``MPI_Allreduce_init`` analogue made trivial by schedules
@@ -860,6 +892,8 @@ class Collectives:
         :meth:`PersistentCollective.start` re-posts it (per-rank sequence
         numbers keep iterations apart, or pass ``key=iteration``).
         """
+        algorithm, segments = CollectiveOptions.merge(
+            options, algorithm=algorithm, segments=segments)
         return PersistentCollective(self, name, algorithm=algorithm,
                                     op=op, root=root, segments=segments)
 

@@ -194,13 +194,24 @@ class ContinuationEngine:
       pushes),
     * ``callback_errors`` — callbacks that raised (error captured on the
       continuation, never on the dispatching thread).
+
+    ``push=False`` is the **legacy polling compatibility mode**: every
+    attached handle — push-capable or not — rides the fallback poll list
+    and is re-``test``-ed per service tick, reproducing the retired TAC
+    ticket pool's O(in-flight × ticks) behaviour on the engine's own
+    queue/dispatch path.  ``TaskRuntime(notify="polling")`` builds its
+    engine this way, so the continuation engine is the ONE completion
+    dispatcher under either backend and only the notification *discipline*
+    (push at match time vs re-test per tick) differs.
     """
 
-    def __init__(self, *, queue_capacity: int = 1024) -> None:
+    def __init__(self, *, queue_capacity: int = 1024,
+                 push: bool = True) -> None:
         if queue_capacity < 1:
             raise ValueError(f"queue_capacity must be >= 1, got "
                              f"{queue_capacity}")
         self.queue_capacity = queue_capacity
+        self.push = push
         self._lock = threading.Lock()
         self._queue: collections.deque = collections.deque()
         self._polled: List[tuple] = []      # (handle, _Pending) fallbacks
@@ -229,7 +240,7 @@ class ContinuationEngine:
         with self._lock:
             self.stats["attached"] += 1
         for h in hs:
-            push = getattr(h, "on_complete", None)
+            push = getattr(h, "on_complete", None) if self.push else None
             if callable(push):
                 # Push path: the handle calls back at match time — this
                 # operation is never tested again.

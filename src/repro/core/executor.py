@@ -127,10 +127,16 @@ class TaskRuntime:
     def continuations(self) -> ContinuationEngine:
         """The runtime's completion-notification engine (lazy).
 
-        One engine — and ONE registered polling service — per runtime,
-        shared by :func:`repro.core.tac.wait`/``iwait`` tickets and the
+        One engine — and ONE registered polling service — per runtime:
+        the ONLY completion dispatcher behind
+        :func:`repro.core.tac.wait`/``iwait``/``iwaitall`` and the
         collectives :class:`~repro.core.collectives.ProgressEngine`
-        under ``notify="continuation"``.  Ready callbacks are dispatched
+        (the legacy TAC ticket pool was folded into it).  Under
+        ``notify="continuation"`` push-capable handles notify at match
+        time; under ``notify="polling"`` the SAME engine runs in its
+        compatibility mode (``push=False``): every handle rides the
+        fallback poll list and is re-tested per tick, preserving the
+        paper's §4.2 polling discipline.  Ready callbacks are dispatched
         by the dedicated poller, by idle workers (§4.5), and at the
         scheduling points (``submit``/``taskwait``) which drain the
         bounded completion queue.
@@ -140,7 +146,8 @@ class TaskRuntime:
             with self._lock:
                 eng = self._continuations
                 if eng is None:
-                    eng = ContinuationEngine()
+                    eng = ContinuationEngine(
+                        push=(self.notify == "continuation"))
                     self._register_service("continuation engine",
                                            eng.service)
                     self._continuations = eng
@@ -171,9 +178,9 @@ class TaskRuntime:
         for t in list(self._threads):
             t.join(timeout=5.0)
         # Deterministic teardown: every service this runtime registered
-        # (TAC ticket pool, collective progress engine, continuation
-        # engine, straggler watch) is unregistered — including after
-        # failed machines — so nothing stays registered forever.
+        # (collective progress engine, continuation engine, straggler
+        # watch) is unregistered — including after failed machines — so
+        # nothing stays registered forever.
         with self._lock:
             services, self._registered_services = \
                 self._registered_services, []
@@ -217,11 +224,16 @@ class TaskRuntime:
     # alias mirroring `#pragma oss task`
     task = submit
 
-    def taskwait(self) -> None:
+    def taskwait(self, handles: Sequence[Any] = ()) -> None:
         """Block until every submitted task has *released* its dependencies.
 
         Like ``#pragma oss taskwait`` this also waits for external events —
         a communication task only counts once its bound operations finished.
+        ``handles`` optionally names extra in-flight operations to wait
+        for as well: anything :func:`repro.core.tac.as_handle` accepts
+        (the same :class:`~repro.core.tac.AsyncHandle` protocol the
+        ``tac.wait`` family consumes), each waited with its OS-level
+        ``wait()`` after the task graph drained.
         """
         if current_task() is not None:
             raise RuntimeError("taskwait() from inside a task is not "
@@ -234,6 +246,10 @@ class TaskRuntime:
             # taskwait is a scheduling point: drain ready continuations
             # so completion never waits on the dedicated poller alone.
             self._drain_continuations()
+        for h in handles:
+            # local import: tac imports this module at load time.
+            from . import tac as _tac
+            _tac.as_handle(h).wait()
         self._raise_errors()
 
     def _raise_errors(self) -> None:

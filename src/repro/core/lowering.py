@@ -56,7 +56,9 @@ through HBM once per stage.  ``stage_impl="pallas"`` routes them through
 the fused single-pass kernels in :mod:`repro.kernels.collective_stages`
 (``"pallas_interpret"`` for CPU parity runs, ``"ref"`` for the jnp
 oracle); ``stage_impl=None`` keeps the plain XLA elementwise path
-byte-for-byte.  ``wire="bf16"``/``"int8"`` additionally narrows the ring
+byte-for-byte.  ``stage_wire="bf16"``/``"int8"`` (formerly spelled
+``wire=``; see :class:`repro.core.options.CollectiveOptions`)
+additionally narrows the ring
 transport dtype (explicit-round ring only): reduce-scatter rounds
 quantise the outgoing chunk and the fused combine dequantises while
 accumulating; the allgather leg quantises each reduced chunk ONCE at its
@@ -76,6 +78,7 @@ from jax import lax
 from ..compat import axis_size
 from ..kernels import ops as kernel_ops
 from . import schedule as schedule_ir
+from .options import CollectiveOptions, renamed_kwarg
 from .schedule import Schedule, Send
 
 Axes = Union[str, Sequence[str]]
@@ -90,10 +93,10 @@ def _check_stage_opts(algorithm: str, stage_impl: Optional[str],
     if wire is None:
         return
     if wire not in _WIRE_DTYPES:
-        raise ValueError(f"unknown wire dtype {wire!r}; choose from "
+        raise ValueError(f"unknown stage_wire dtype {wire!r}; choose from "
                          f"{sorted(_WIRE_DTYPES)}")
     if stage_impl is None:
-        raise ValueError("wire= needs a fused stage tier; pass "
+        raise ValueError("stage_wire= needs a fused stage tier; pass "
                          "stage_impl=")
     if algorithm != "ring":
         raise ValueError(f"wire cast covers explicit ring rounds only, "
@@ -137,31 +140,42 @@ def sends_per_rank(sched: Schedule) -> int:
 # Allreduce lowerings
 # ---------------------------------------------------------------------------
 def allreduce(x: jax.Array, axes: Axes, *,
-              algorithm: str = "native", segments: int = 1,
+              algorithm: Optional[str] = None, segments: int = 1,
               sched: Optional[Schedule] = None,
               stage_impl: Optional[str] = None,
-              wire: Optional[str] = None) -> jax.Array:
+              stage_wire: Optional[str] = None,
+              wire: Optional[str] = None,
+              options: Optional[CollectiveOptions] = None) -> jax.Array:
     """Sum-allreduce ``x`` over ``axes`` with a chosen schedule.
 
-    ``algorithm="native"`` emits one fused ``lax.psum`` node (XLA picks
-    the rounds); ``"ring"``/``"doubling"`` build (or take) a schedule and
-    emit its explicit ppermute rounds.  Must be called inside
-    ``shard_map`` manual over ``axes``.
+    ``algorithm="native"`` (the default) emits one fused ``lax.psum``
+    node (XLA picks the rounds); ``"ring"``/``"doubling"`` build (or
+    take) a schedule and emit its explicit ppermute rounds.  Must be
+    called inside ``shard_map`` manual over ``axes``.
 
     ``stage_impl`` routes the between-round elementwise stages through
     the fused Pallas tier (``"pallas"``/``"pallas_interpret"``/``"ref"``;
-    ``None`` keeps the plain XLA path).  ``wire`` narrows the ring
+    ``None`` keeps the plain XLA path).  ``stage_wire`` narrows the ring
     transport dtype (``"bf16"``/``"int8"``; needs ``stage_impl``, ring
-    algorithm only).
+    algorithm only).  ``wire=`` is the deprecated spelling of
+    ``stage_wire=``; an explicit :class:`CollectiveOptions` spec is
+    accepted as ``options=``.
     """
+    stage_wire = renamed_kwarg("wire", wire, "stage_wire", stage_wire)
+    algorithm, segments, stage_impl, stage_wire = CollectiveOptions.merge(
+        options, algorithm=algorithm, segments=segments,
+        stage_impl=stage_impl, stage_wire=stage_wire)
+    if algorithm is None:
+        algorithm = "native"
     if sched is None and algorithm == "native":
-        if stage_impl is not None or wire is not None:
+        if stage_impl is not None or stage_wire is not None:
             raise ValueError("native lowering is one fused psum node — "
-                             "no stages to fuse; drop stage_impl=/wire=")
+                             "no stages to fuse; drop "
+                             "stage_impl=/stage_wire=")
         return lax.psum(x, tuple(axes) if not isinstance(axes, str)
                         else (axes,))
     _check_stage_opts(algorithm if sched is None else sched.algorithm,
-                      stage_impl, wire)
+                      stage_impl, stage_wire)
     if sched is None and algorithm == "hierarchical":
         if segments != 1:
             # mirror Collectives._resolve: the composed schedule is fixed,
@@ -176,17 +190,28 @@ def allreduce(x: jax.Array, axes: Axes, *,
         sched = schedule_ir.build("allreduce", algorithm, axis_size(axis),
                                   segments=segments)
     return lower_allreduce(sched, x, axes, stage_impl=stage_impl,
-                           wire=wire)
+                           stage_wire=stage_wire)
 
 
 def lower_allreduce(sched: Schedule, x: jax.Array, axes: Axes, *,
                     stage_impl: Optional[str] = None,
-                    wire: Optional[str] = None) -> jax.Array:
-    """Lower an allreduce schedule to explicit in-graph rounds."""
+                    stage_wire: Optional[str] = None,
+                    wire: Optional[str] = None,
+                    options: Optional[CollectiveOptions] = None
+                    ) -> jax.Array:
+    """Lower an allreduce schedule to explicit in-graph rounds.
+
+    The schedule fixes algorithm and segmentation, so ``options=`` may
+    only set the stage-tier knobs here.  ``wire=`` is the deprecated
+    spelling of ``stage_wire=``.
+    """
+    stage_wire = renamed_kwarg("wire", wire, "stage_wire", stage_wire)
+    stage_impl, stage_wire = CollectiveOptions.merge(
+        options, stage_impl=stage_impl, stage_wire=stage_wire)
     if sched.name != "allreduce":
         raise ValueError(f"expected an allreduce schedule, got "
                          f"{sched.name!r}")
-    _check_stage_opts(sched.algorithm, stage_impl, wire)
+    _check_stage_opts(sched.algorithm, stage_impl, stage_wire)
     if sched.algorithm == "hierarchical":
         return _hierarchical_allreduce(sched, x, axes,
                                        stage_impl=stage_impl)
@@ -196,7 +221,7 @@ def lower_allreduce(sched: Schedule, x: jax.Array, axes: Axes, *,
         return x
     if sched.algorithm == "ring":
         return _ring_allreduce(x, axis, sched.n, sched.segments,
-                               stage_impl=stage_impl, wire=wire)
+                               stage_impl=stage_impl, wire=stage_wire)
     if sched.algorithm == "doubling":
         if sched.n & (sched.n - 1):
             # fold/unfold needs rank-asymmetric control flow, which SPMD

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from ..compat import axis_size
 from . import lowering
 from . import schedule as schedule_ir
+from .options import CollectiveOptions, renamed_kwarg
 
 DEFAULT_BUCKET_BYTES = 4 << 20
 
@@ -85,13 +86,14 @@ def _make_buckets(nbytes: Sequence[int],
 def _wire_dtype(leaf, compress: Optional[str], wire: str):
     """The dtype a leaf travels (and accumulates) in.
 
-    Default ``wire="fp32"``: everything upcasts to fp32 — the safe
-    accumulation the pre-IR code always used (the repo's default model
-    dtype is bf16, so silently summing DP gradients in bf16 would be a
-    numerics regression).  ``wire="leaf"`` opts floating leaves into
-    their own dtype (a bf16 grad travels AND accumulates in bf16 — the
-    same trade ``compress="bf16"`` makes globally); integer dtypes always
-    upcast (a psum would overflow).  ``compress`` overrides both.
+    Default ``reduce_dtype="fp32"``: everything upcasts to fp32 — the
+    safe accumulation the pre-IR code always used (the repo's default
+    model dtype is bf16, so silently summing DP gradients in bf16 would
+    be a numerics regression).  ``reduce_dtype="leaf"`` opts floating
+    leaves into their own dtype (a bf16 grad travels AND accumulates in
+    bf16 — the same trade ``compress="bf16"`` makes globally); integer
+    dtypes always upcast (a psum would overflow).  ``compress`` overrides
+    both.
     """
     if compress == "bf16":
         return jnp.dtype(jnp.bfloat16)
@@ -104,10 +106,13 @@ def _wire_dtype(leaf, compress: Optional[str], wire: str):
 def sync_grads(grads, *, axes, mode: str = "bucketed",
                bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                compress: Optional[str] = None, mean: bool = True,
-               algorithm: str = "native", segments: int = 1,
-               wire: str = "fp32", hierarchical: bool = False,
+               algorithm: Optional[str] = None, segments: int = 1,
+               reduce_dtype: Optional[str] = None,
+               wire: Optional[str] = None,
+               hierarchical: Optional[bool] = None,
                stage_impl: Optional[str] = None,
-               stage_wire: Optional[str] = None):
+               stage_wire: Optional[str] = None,
+               options: Optional[CollectiveOptions] = None):
     """Reduce gradients over the (manual) DP axes with a chosen schedule.
 
     Must be called inside ``shard_map`` manual over ``axes``.  ``mode``
@@ -123,22 +128,36 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
     ring rounds, inter-axis butterfly or fused psum), the Level-B form of
     :class:`repro.core.collectives.HierarchicalCollectives`.
 
-    Wire dtype: by default every leaf travels and accumulates in fp32
-    (identical numerics to the pre-IR code in every mode); ``wire="leaf"``
-    opts floating leaves into their own dtype — halving bf16 wire bytes
-    at the cost of bf16 accumulation, the same trade ``compress="bf16"``
-    makes globally.  Buckets are dtype-grouped and sized by bytes AS
-    SENT, so ``bucket_bytes`` bounds the real message size under either
-    setting.  The wire rule is shared by all three modes, so mode
-    selection never changes numerics.
+    Presentation dtype: by default (``reduce_dtype="fp32"``) every leaf
+    travels and accumulates in fp32 — identical numerics to the pre-IR
+    code in every mode; ``reduce_dtype="leaf"`` opts floating leaves
+    into their own dtype — halving bf16 wire bytes at the cost of bf16
+    accumulation, the same trade ``compress="bf16"`` makes globally.
+    Buckets are dtype-grouped and sized by bytes AS SENT, so
+    ``bucket_bytes`` bounds the real message size under either setting.
+    The rule is shared by all three modes, so mode selection never
+    changes numerics.  ``wire=`` is the deprecated spelling of
+    ``reduce_dtype=`` (see
+    :class:`repro.core.options.CollectiveOptions`, accepted here as
+    ``options=``).
 
     ``stage_impl`` routes each bucket's between-round elementwise stages
     through the fused Pallas tier (see
     :func:`repro.core.lowering.allreduce`; explicit-round algorithms
     only).  ``stage_wire`` (``"bf16"``/``"int8"``) additionally narrows
-    the ring transport dtype per round — distinct from ``wire=``, which
-    picks the dtype a leaf is PRESENTED to the collective in.
+    the ring transport dtype per round — distinct from ``reduce_dtype=``,
+    which picks the dtype a leaf is PRESENTED to the collective in.
     """
+    reduce_dtype = renamed_kwarg("wire", wire, "reduce_dtype",
+                                 reduce_dtype)
+    (algorithm, segments, hierarchical, stage_impl, stage_wire,
+     reduce_dtype) = CollectiveOptions.merge(
+        options, algorithm=algorithm, segments=segments,
+        hierarchical=hierarchical, stage_impl=stage_impl,
+        stage_wire=stage_wire, reduce_dtype=reduce_dtype)
+    algorithm = algorithm or "native"
+    reduce_dtype = reduce_dtype or "fp32"
+    hierarchical = bool(hierarchical)
     if isinstance(axes, str):
         axes = (axes,)
     if compress == "int8" and (stage_impl is not None
@@ -167,18 +186,20 @@ def sync_grads(grads, *, axes, mode: str = "bucketed",
             x = x.astype(jnp.bfloat16)
         x = lowering.allreduce(x, axis_arg, algorithm=algorithm,
                                segments=segments, stage_impl=stage_impl,
-                               wire=stage_wire)
+                               stage_wire=stage_wire)
         return x.astype(jnp.float32)
 
-    if wire not in ("fp32", "leaf"):
-        raise ValueError(f"unknown wire dtype policy {wire!r}; "
+    if reduce_dtype not in ("fp32", "leaf"):
+        raise ValueError(f"unknown reduce_dtype policy {reduce_dtype!r}; "
                          f"one of ['fp32', 'leaf']")
-    # Leaves group by their wire dtype in EVERY mode, so the per-leaf
-    # numerics are identical whichever mode is selected (under the fp32
-    # default that is one group with the exact pre-IR layout and HLO).
+    # Leaves group by their presentation dtype in EVERY mode, so the
+    # per-leaf numerics are identical whichever mode is selected (under
+    # the fp32 default that is one group with the exact pre-IR layout
+    # and HLO).
     groups: Dict[Any, List[int]] = {}
     for i, l in enumerate(leaves):
-        groups.setdefault(_wire_dtype(l, compress, wire), []).append(i)
+        groups.setdefault(_wire_dtype(l, compress, reduce_dtype),
+                          []).append(i)
 
     if mode == "fused":
         # one collective per wire dtype (one total for uniform models) —

@@ -27,9 +27,11 @@ communication tasks themselves (the *sentinel* pattern, §7.1).
 
 from __future__ import annotations
 
+import concurrent.futures
 import itertools
 import math
 import threading
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -115,7 +117,34 @@ class CommRevokedError(RankFailedError):
 # Asynchronous handles ("MPI_Request" analogues)
 # ---------------------------------------------------------------------------
 class AsyncHandle:
-    """A testable/waitable in-flight operation."""
+    """A testable/waitable in-flight operation — THE async protocol.
+
+    This is the one contract every asynchronous surface in the runtime
+    speaks (documented here once; ``docs/api.md`` lists the conforming
+    types):
+
+    * ``test() -> bool`` — non-blocking completion probe (``MPI_Test``);
+    * ``wait() -> Any``  — OS-level blocking wait (the 'PMPI' path),
+      returning the result;
+    * ``result``         — the completed operation's value; raises the
+      stored error for erroneous completions (ULFM's
+      error-on-completion model).
+
+    Everything that consumes handles — :func:`wait`/:func:`iwait`/
+    :func:`iwaitall`/:func:`waitall`,
+    :meth:`repro.core.executor.TaskRuntime.taskwait`,
+    :meth:`repro.core.continuations.ContinuationEngine.attach`, and the
+    serving engine (:mod:`repro.serving`) — accepts exactly this
+    protocol (loose inputs are coerced by :func:`as_handle`), and
+    everything that produces asynchrony — :class:`ArrayHandle`,
+    :class:`EventHandle` (and its send/recv/collective subclasses),
+    :class:`FutureHandle`, :class:`CompositeHandle`,
+    :class:`~repro.core.continuations.Continuation` — returns it.
+    Push-capable handles additionally expose ``on_complete(cb)``
+    (:class:`~repro.core.continuations.PushCompletion`), which the
+    continuation engine uses for O(completions) notification; handles
+    without it are re-tested from the engine's fallback poll list.
+    """
 
     def test(self) -> bool:
         raise NotImplementedError
@@ -1023,15 +1052,61 @@ class DistGraphGroup(_NeighborTopology, CommGroup):
 
 
 # ---------------------------------------------------------------------------
-# Ticket pool + polling service (Figs. 3 & 4, bottom halves)
+# The AsyncHandle protocol coercion — ONE async-wait surface
 # ---------------------------------------------------------------------------
+def as_handle(obj: Any) -> AsyncHandle:
+    """Coerce ``obj`` to the :class:`AsyncHandle` protocol.
+
+    The single normalisation point of the public async surface: whatever
+    :func:`wait`/:func:`iwait`/:func:`iwaitall`,
+    :meth:`repro.core.executor.TaskRuntime.taskwait` and
+    :meth:`repro.core.continuations.ContinuationEngine.attach` accept
+    goes through here.  Accepted inputs:
+
+    * anything already satisfying the protocol (``test()``/``wait()``/
+      ``result`` — every :class:`AsyncHandle` subclass,
+      :class:`~repro.core.collectives.CollectiveHandle`, and
+      :class:`~repro.core.continuations.Continuation`), returned as-is;
+    * a ``concurrent.futures.Future`` (wrapped in :class:`FutureHandle`);
+    * a pytree of JAX arrays (wrapped in :class:`ArrayHandle` — XLA's
+      async dispatch is the in-flight operation);
+    * a list/tuple of any of the above (wrapped in
+      :class:`CompositeHandle`).
+    """
+    if isinstance(obj, AsyncHandle):
+        return obj
+    if callable(getattr(obj, "test", None)) and \
+            callable(getattr(obj, "wait", None)):
+        return obj          # duck-typed protocol (e.g. Continuation)
+    if isinstance(obj, concurrent.futures.Future):
+        return FutureHandle(obj)
+    if isinstance(obj, (list, tuple)):
+        return CompositeHandle([as_handle(h) for h in obj])
+    return ArrayHandle(obj)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated ticket-pool shims (pre-fold entry points)
+# ---------------------------------------------------------------------------
+def _ticket_pool_deprecated(name: str) -> None:
+    warnings.warn(
+        f"tac.{name} is deprecated: the TAC ticket pool was folded into "
+        f"the runtime's ContinuationEngine (runtime.continuations), the "
+        f"single completion dispatcher for both notify backends; attach "
+        f"callbacks there instead",
+        DeprecationWarning, stacklevel=3)
+
+
 class _Ticket:
+    """Deprecated record of the retired ticket pool (shim)."""
+
     __slots__ = ("handle", "waiter", "counter", "n_events")
 
     def __init__(self, handle: AsyncHandle,
                  waiter: Optional[BlockingContext] = None,
                  counter: Optional[EventCounter] = None,
                  n_events: int = 1) -> None:
+        _ticket_pool_deprecated("_Ticket")
         self.handle = handle
         self.waiter = waiter      # blocking mode: context to unblock
         self.counter = counter    # non-blocking mode: counter to decrease
@@ -1039,134 +1114,118 @@ class _Ticket:
 
 
 class _TicketPool:
-    """Pending tickets of one runtime, drained by its polling service."""
+    """Deprecated facade over the runtime's :class:`ContinuationEngine`.
+
+    The ticket pool is no longer an independent completion path: ``add``
+    attaches the ticket's unblock/decrease action to the continuation
+    engine (which re-tests push-less handles from its fallback poll list
+    — the old pool's discipline), and ``pending`` reads the engine's
+    fallback-list length.  No polling service of its own is registered.
+    """
 
     def __init__(self, runtime: TaskRuntime) -> None:
-        self._lock = threading.Lock()
-        self._tickets: List[_Ticket] = []
-        runtime._register_service("TAC ticket pool", self.poll)
+        _ticket_pool_deprecated("_TicketPool")
+        self._runtime = runtime
 
     def add(self, ticket: _Ticket) -> None:
-        with self._lock:
-            self._tickets.append(ticket)
-
-    def poll(self, _data: Any) -> bool:
-        with self._lock:
-            snapshot = list(self._tickets)
-        completed = [t for t in snapshot if t.handle.test()]
-        if completed:
-            with self._lock:
-                self._tickets = [t for t in self._tickets
-                                 if t not in completed]
-            for t in completed:
-                if t.waiter is not None:
-                    unblock_task(t.waiter)            # blocking mode
-                if t.counter is not None:
-                    decrease_task_event_counter(t.counter, t.n_events)
-        return False  # stay registered
+        eng = self._runtime.continuations
+        if ticket.waiter is not None:
+            waiter = ticket.waiter
+            eng.attach(ticket.handle, lambda: unblock_task(waiter))
+        if ticket.counter is not None:
+            counter, n = ticket.counter, ticket.n_events
+            eng.attach(ticket.handle,
+                       lambda: decrease_task_event_counter(counter, n))
 
     @property
     def pending(self) -> int:
-        with self._lock:
-            return len(self._tickets)
+        return self._runtime.continuations.polled
 
 
 def _pool(runtime: TaskRuntime) -> _TicketPool:
-    pool = getattr(runtime, "_tac_pool", None)
-    if pool is None:
-        with runtime._lock:
-            pool = getattr(runtime, "_tac_pool", None)
-            if pool is None:
-                pool = _TicketPool(runtime)
-                runtime._tac_pool = pool  # type: ignore[attr-defined]
-    return pool
+    _ticket_pool_deprecated("_pool")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return _TicketPool(runtime)
+
+
+def _use_continuations(runtime: TaskRuntime) -> bool:
+    """Deprecated: the continuation engine is the only completion
+    dispatcher now; ``notify="polling"`` is a compatibility mode of the
+    SAME engine (``push=False``), so there is no branch left to take."""
+    _ticket_pool_deprecated("_use_continuations")
+    return True
 
 
 # ---------------------------------------------------------------------------
 # The two interoperability modes
 # ---------------------------------------------------------------------------
-def _use_continuations(runtime: TaskRuntime) -> bool:
-    """True when the runtime's notification backend is the continuation
-    engine (``TaskRuntime(notify="continuation")``): completions are
-    *pushed* at match time and dispatched from bounded queues, instead of
-    the ticket pool re-``test``-ing every in-flight handle per poll."""
-    return getattr(runtime, "notify", "polling") == "continuation"
-
-
-def wait(handle: AsyncHandle) -> Any:
+def wait(handle: Any) -> Any:
     """Task-aware blocking wait (§6.1, Fig. 3).
 
-    Inside a task with TASK_MULTIPLE enabled: test; if incomplete, register a
-    ticket and *pause the task* — the worker runs other ready tasks and the
-    polling service resumes us on completion.  Otherwise: plain blocking wait
-    (the PMPI path).  Under the continuation backend the resume fires from
-    the handle's completion callback — no ticket is ever re-tested.
+    Accepts anything :func:`as_handle` accepts.  Inside a task with
+    TASK_MULTIPLE enabled: test; if incomplete, attach a resume callback
+    to the runtime's continuation engine and *pause the task* — the
+    worker runs other ready tasks until the completion dispatch unblocks
+    us (pushed at match time under ``notify="continuation"``; re-tested
+    from the engine's poll list under the ``notify="polling"``
+    compatibility mode).  Otherwise: plain blocking wait (the PMPI path).
     """
+    handle = as_handle(handle)
     task = current_task()
     if is_enabled() and task is not None:
         if handle.test():
             return handle.result
         ctx = get_current_blocking_context()
-        rt = task._runtime
-        if _use_continuations(rt):
-            rt.continuations.attach(handle, lambda: unblock_task(ctx))
-        else:
-            _pool(rt).add(_Ticket(handle, waiter=ctx))
+        task._runtime.continuations.attach(
+            handle, lambda: unblock_task(ctx))
         block_current_task(ctx)
         return handle.result
     handle.wait()
     return handle.result
 
 
-def waitall(handles: Sequence[AsyncHandle]) -> List[Any]:
+def waitall(handles: Sequence[Any]) -> List[Any]:
     """Blocking wait on several handles with a single pause/resume cycle."""
-    composite = CompositeHandle(handles)
-    wait(composite)
-    return [h.result for h in handles]
+    coerced = [as_handle(h) for h in handles]
+    wait(CompositeHandle(coerced))
+    return [h.result for h in coerced]
 
 
-def iwait(handle: AsyncHandle) -> None:
+def iwait(handle: Any) -> None:
     """TAMPI_Iwait (§6.2, Fig. 4): bind ``handle`` to the task's events.
 
-    Returns immediately.  The calling task's dependencies are released only
-    once the task finishes *and* the handle completes.  The buffers produced
-    by the operation must not be consumed inside this task after the call —
+    Accepts anything :func:`as_handle` accepts and returns immediately.
+    The calling task's dependencies are released only once the task
+    finishes *and* the handle completes.  The buffers produced by the
+    operation must not be consumed inside this task after the call —
     consumers declare dependencies instead (Fig. 5).
     """
+    handle = as_handle(handle)
     task = current_task()
     if is_enabled() and task is not None:
         if handle.test():
             return
         cnt = get_current_event_counter()
         increase_current_task_event_counter(cnt, 1)
-        rt = task._runtime
-        if _use_continuations(rt):
-            rt.continuations.attach(
-                handle, lambda: decrease_task_event_counter(cnt, 1))
-        else:
-            _pool(rt).add(_Ticket(handle, counter=cnt))
+        task._runtime.continuations.attach(
+            handle, lambda: decrease_task_event_counter(cnt, 1))
         return
     handle.wait()
 
 
-def iwaitall(handles: Sequence[AsyncHandle]) -> None:
+def iwaitall(handles: Sequence[Any]) -> None:
     """TAMPI_Iwaitall (§6.2): bind several handles to the task's events."""
     task = current_task()
     if is_enabled() and task is not None:
-        pending = [h for h in handles if not h.test()]
+        pending = [h for h in map(as_handle, handles) if not h.test()]
         if not pending:
             return
         cnt = get_current_event_counter()
         increase_current_task_event_counter(cnt, len(pending))
-        rt = task._runtime
-        if _use_continuations(rt):
-            n = len(pending)
-            rt.continuations.attach(
-                pending, lambda: decrease_task_event_counter(cnt, n))
-        else:
-            pool = _pool(rt)
-            for h in pending:
-                pool.add(_Ticket(h, counter=cnt))
+        n = len(pending)
+        task._runtime.continuations.attach(
+            pending, lambda: decrease_task_event_counter(cnt, n))
         return
-    for h in handles:
+    for h in map(as_handle, handles):
         h.wait()

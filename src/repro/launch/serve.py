@@ -1,11 +1,12 @@
-"""Batched serving driver: prefill + decode loop with a fixed-size cache.
+"""Serving CLI: continuous batching on the task runtime.
 
-Demonstrates the inference path end-to-end on CPU at smoke scale:
-continuous batched greedy decoding with the framework's sharded prefill
-and decode steps, prefill→decode cache handoff (pad_cache), and async
-host-side detokenisation through the task runtime (the external-events
-pattern applied to serving: the device decode loop never waits for the
-host consumer).
+Thin front-end over :class:`repro.serving.engine.ServingEngine` with the
+real model path (:class:`repro.serving.lm.LMAdapter`): ``--batch``
+requests are admitted through the engine's queue and decoded greedily,
+each prefill/decode micro-step and host detokenisation a runtime task,
+with device completion bound through the AsyncHandle protocol
+(``--completion event``) or synchronised in-task (``--completion
+blocking``, the sentinel baseline).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --batch 4 --prompt-len 32 --gen 32
@@ -15,17 +16,14 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from .. import configs
-from ..core import TaskRuntime, tac
-from ..models import model, inputs as model_inputs
-from ..runtime import steps
+from ..models import model
 from ..runtime.sharding import ShardingPolicy
+from ..serving import Request, ServingEngine
+from ..serving.lm import LMAdapter
 from . import mesh as meshlib
 
 
@@ -33,10 +31,16 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="granite-3-2b")
     p.add_argument("--scale", default="smoke", choices=["smoke", "full"])
-    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--batch", type=int, default=4,
+                   help="number of requests to serve")
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--slots", type=int, default=4,
+                   help="max in-flight requests (continuous batching)")
+    p.add_argument("--completion", default="event",
+                   choices=["event", "blocking"])
+    p.add_argument("--workers", type=int, default=4)
     args = p.parse_args(argv)
 
     cfg = configs.smoke(args.arch) if args.scale == "smoke" \
@@ -46,62 +50,26 @@ def main(argv=None) -> int:
         return 0
     mesh = meshlib.local_mesh(model=1)
     policy = ShardingPolicy(fsdp=False, tp=False, sp=False, remat=None)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(cfg, key)
+    params = model.init(cfg, jax.random.PRNGKey(args.seed))
 
-    B, P, G = args.batch, args.prompt_len, args.gen
-    total = P + G
-    batch = model_inputs.make_batch(cfg, batch=B, seq=P, kind="prefill",
-                                    key=key)
+    adapter = LMAdapter(cfg, mesh, policy, params,
+                        prompt_len=args.prompt_len, gen_len=args.gen)
+    adapter.warmup()
 
-    with mesh:
-        prefill = steps.build_prefill_step(
-            cfg, mesh, policy,
-            abstract_batch=jax.eval_shape(lambda: batch))
-        dec_batch_spec = jax.eval_shape(
-            lambda: {"tokens": jnp.zeros((B, 1), jnp.int32)})
-        decode, _ = steps.build_decode_step(
-            cfg, mesh, policy, batch=B, cache_len=total,
-            abstract_batch=dec_batch_spec, donate=False)
+    engine = ServingEngine(adapter, slots=args.slots,
+                           completion=args.completion,
+                           num_workers=args.workers)
+    requests = [Request(rid=i, prompt=args.seed * 1000 + i,
+                        gen_len=args.gen) for i in range(args.batch)]
+    report = engine.run(requests)
 
-        t0 = time.monotonic()
-        logits, cache = prefill(params, batch)
-        cache = model.pad_cache(cfg, cache, total)
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        t_prefill = time.monotonic() - t0
-
-        # async host consumer: the decode loop binds each emitted token to
-        # an external event; a host task drains them without ever stalling
-        # the device loop (paper Fig. 2 applied to serving)
-        emitted = []
-        rt = TaskRuntime(num_workers=1)
-        rt.start()
-
-        def consume(step, handle):
-            def fn():
-                tok = np.asarray(tac.wait(handle))
-                emitted.append((step, tok))
-            rt.submit(fn, inout=["emit-order"], name=f"emit@{step}")
-
-        t0 = time.monotonic()
-        for i in range(G):
-            dec_in = {"tokens": next_tok[:, None]}
-            logits, cache = decode(params, cache, dec_in,
-                                   jnp.int32(P + i))
-            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            consume(i, tac.ArrayHandle(next_tok))
-        rt.taskwait()
-        rt.close()
-        t_decode = time.monotonic() - t0
-
-    toks = np.stack([t for _, t in sorted(emitted)], axis=1)
-    print(f"[serve] arch={cfg.name} batch={B} prompt={P} gen={G}")
-    print(f"[serve] prefill: {t_prefill * 1e3:.1f} ms "
-          f"({B * P / t_prefill:.0f} tok/s)")
-    print(f"[serve] decode:  {t_decode / G * 1e3:.2f} ms/step "
-          f"({B * G / t_decode:.0f} tok/s)")
-    print(f"[serve] sample continuation (seq 0): {toks[0][:16].tolist()}")
-    assert toks.shape == (B, G)
+    print(f"[serve] arch={cfg.name} requests={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen} slots={args.slots} "
+          f"completion={args.completion}")
+    print(f"[serve] {report.summary()}")
+    sample = report.outputs[0][:16]
+    print(f"[serve] sample continuation (req 0): {sample}")
+    assert all(len(report.outputs[r.rid]) == args.gen for r in requests)
     return 0
 
 

@@ -1,0 +1,22 @@
+"""repro.serving — continuous-batching LM serving on the task runtime.
+
+Task-aware serving: every prefill, decode micro-step, and host
+detokenisation is a :class:`repro.core.executor.TaskRuntime` task, bound
+to device/communication completion through the unified
+:class:`repro.core.tac.AsyncHandle` protocol — continuous batching,
+compute/host overlap, and ULFM failure recovery all fall out of the
+runtime the training path already uses.  See ``docs/api.md`` and the
+"Serving" section of ``docs/architecture.md``.
+"""
+
+from .engine import ServingEngine
+from .metrics import MetricSink, ServeReport, TokenRecord, percentile
+from .queue import RequestQueue
+from .request import Request, RequestState
+from .synthetic import SyntheticAdapter, token_at
+
+__all__ = [
+    "ServingEngine", "Request", "RequestState", "RequestQueue",
+    "ServeReport", "TokenRecord", "MetricSink", "percentile",
+    "SyntheticAdapter", "token_at",
+]

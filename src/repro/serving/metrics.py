@@ -1,0 +1,96 @@
+"""Serving metrics: per-token latency records and the run report."""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Tuple
+
+__all__ = ["TokenRecord", "MetricSink", "ServeReport", "percentile"]
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of a non-empty list."""
+    if not values:
+        raise ValueError("percentile of an empty list")
+    xs = sorted(values)
+    k = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[k]
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenRecord:
+    """One emitted token: which request/step, and its latency window.
+
+    ``t_submit`` is when the scheduler handed the decode micro-step to
+    the runtime, ``t_emit`` when the host detokeniser finished with the
+    token — so the latency covers device compute, completion
+    notification, and host post-processing, which is exactly the window
+    the event-bound vs blocking-sentinel legs differ in.
+    """
+
+    rid: int
+    step: int
+    t_submit: float
+    t_emit: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_emit - self.t_submit
+
+
+class MetricSink:
+    """Thread-safe collector the engine's tasks append records to."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._records: List[TokenRecord] = []
+
+    def emit(self, rec: TokenRecord) -> None:
+        with self._lock:
+            self._records.append(rec)
+
+    @property
+    def records(self) -> List[TokenRecord]:
+        with self._lock:
+            return list(self._records)
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Outcome of one :meth:`repro.serving.engine.ServingEngine.run`."""
+
+    completion: str                     # "event" | "blocking"
+    requests: int
+    tokens: int
+    wall_s: float
+    tokens_per_s: float
+    p50_ms: float
+    p99_ms: float
+    evictions: int
+    recoveries: int
+    outputs: Dict[int, List[Any]]       # rid -> emitted tokens, step order
+
+    @staticmethod
+    def build(completion: str, records: List[TokenRecord], wall_s: float,
+              outputs: Dict[int, List[Any]], evictions: int,
+              recoveries: int) -> "ServeReport":
+        lat = [r.latency_s for r in records]
+        return ServeReport(
+            completion=completion,
+            requests=len(outputs),
+            tokens=len(records),
+            wall_s=wall_s,
+            tokens_per_s=len(records) / wall_s if wall_s > 0 else 0.0,
+            p50_ms=percentile(lat, 50) * 1e3 if lat else 0.0,
+            p99_ms=percentile(lat, 99) * 1e3 if lat else 0.0,
+            evictions=evictions,
+            recoveries=recoveries,
+            outputs=outputs)
+
+    def summary(self) -> str:
+        return (f"[{self.completion}] {self.tokens} tok / {self.requests} "
+                f"req in {self.wall_s:.3f}s = {self.tokens_per_s:.0f} "
+                f"tok/s, p50 {self.p50_ms:.2f} ms, p99 {self.p99_ms:.2f} "
+                f"ms, evictions={self.evictions}, "
+                f"recoveries={self.recoveries}")

@@ -209,14 +209,28 @@ def ratios(rows: List[Tuple[str, dict]],
 
 
 def gate(cur: Dict[str, float], base: Dict[str, float],
-         tolerance: float) -> List[str]:
+         tolerance: float,
+         scope: Optional[List[str]] = None) -> List[str]:
     """Drift report; non-empty means fail.  NEW rows (in the current run
     but not the baseline) are reported without failing — adding a bench
     leg must not insta-break CI; the baseline refresh picks it up.  A
     baseline row MISSING from the current run fails: a leg (or its
     ``features`` key) silently dropping out is exactly the unmeasured
-    regression the gate exists to catch."""
+    regression the gate exists to catch.
+
+    ``scope`` (a report's top-level ``gate_scope`` list) restricts that
+    missing-row check to baseline rows under the named prefixes: a
+    report that declares which row namespaces it owns (e.g. the serving
+    bench's ``["serve"]``) is only accountable for THOSE baseline rows,
+    so two benches can gate against one shared baseline without each
+    failing over the other's rows.  Drift checks are unaffected — every
+    row the report does emit is still compared.  No scope = the report
+    answers for the whole baseline (the pre-scope behaviour)."""
     failures = []
+    if scope is not None:
+        base = {name: v for name, v in base.items()
+                if any(name == p or name.startswith(p + ".")
+                       for p in scope)}
     for name in sorted(cur):
         if name not in base:
             print(f"  new row (not gated): {name}")
@@ -340,7 +354,8 @@ def main(argv=None) -> int:
         tolerance = args.tolerance or float(base.get("tolerance", 3.0))
         print(f"gating against {args.baseline} "
               f"(tolerance ×{tolerance}):")
-        failures = gate(cur, base["ratios"], tolerance)
+        failures = gate(cur, base["ratios"], tolerance,
+                        scope=report.get("gate_scope"))
         failures.extend(executor_overhead_failures(consts))
         if failures:
             for f_ in failures:

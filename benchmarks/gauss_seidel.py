@@ -317,7 +317,7 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
                           in_=[("blk", gy, gx, it - 1)
                                for gy, gx in boundary_blocks(r)],
                           out=[("halo", r, it)], label="comm",
-                          name=f"halo[{r}]@{it}")
+                          name=f"halo[{r}]@{it}", rank=r)
 
         # ---- compute phase (intra-rank wavefront) ------------------------
         for gy in range(NYb):
@@ -328,7 +328,8 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
                     rt.submit(compute_block, gy, gx, it,
                               out=[("blk", gy, gx, it)],
                               in_=block_deps(gy, gx, it),
-                              label="compute", name=f"c[{gy},{gx}]@{it}")
+                              label="compute", name=f"c[{gy},{gx}]@{it}",
+                              rank=rank_of(gy, gx))
 
         # ---- global residual: hierarchical allreduce ---------------------
         if version in ("pure", "forkjoin"):
@@ -366,7 +367,7 @@ def run_real(version: str, *, n_ranks: int = 4, workers: int = 2,
                           in_=[("blk", gy, gx, it)
                                for gy in range(ry * nby, (ry + 1) * nby)
                                for gx in range(rx * nbx, (rx + 1) * nbx)],
-                          label="comm", name=f"res[{r}]@{it}")
+                          label="comm", name=f"res[{r}]@{it}", rank=r)
 
     rt.taskwait()
     stats = dict(rt.stats)
@@ -467,7 +468,7 @@ def _elastic_iteration(cart, hx, coll, prev, *, nby, nbx, bs, mode, rt, it):
 
     for r in range(n_ranks):
         rt.submit(halo_task(r), out=[("halo", r, it)], label="comm",
-                  name=f"ehalo[{r}]@{it}")
+                  name=f"ehalo[{r}]@{it}", rank=r)
     for gy in range(NYb):
         for gx in range(NXb):
             r = rank_of(gy, gx)
@@ -478,7 +479,7 @@ def _elastic_iteration(cart, hx, coll, prev, *, nby, nbx, bs, mode, rt, it):
                 deps.append(("blk", gy, gx - 1, it))
             rt.submit(compute_block, gy, gx, in_=deps,
                       out=[("blk", gy, gx, it)], label="compute",
-                      name=f"ec[{gy},{gx}]@{it}")
+                      name=f"ec[{gy},{gx}]@{it}", rank=r)
     for r in range(n_ranks):
         def res_task(r=r):
             ry, rx = cart.coords(r)
@@ -492,7 +493,7 @@ def _elastic_iteration(cart, hx, coll, prev, *, nby, nbx, bs, mode, rt, it):
                   in_=[("blk", gy, gx, it)
                        for gy in range(ry * nby, (ry + 1) * nby)
                        for gx in range(rx * nbx, (rx + 1) * nbx)],
-                  label="comm", name=f"eres[{r}]@{it}")
+                  label="comm", name=f"eres[{r}]@{it}", rank=r)
     rt.taskwait()
     vals = {r: float(v.result if isinstance(v, tac.AsyncHandle) else v)
             for r, v in res.items()}
@@ -836,6 +837,88 @@ def bench(print_fn=print, smoke: bool = False):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# traced leg: Perfetto timeline + overlap accounting (repro.obs)
+# ---------------------------------------------------------------------------
+def run_traced(trace_path: str, *, smoke: bool = False,
+               print_fn=print) -> Dict[str, float]:
+    """``--trace`` leg: real runs under the tracer, one Perfetto artifact.
+
+    Runs the sentinel, interop-blk, and interop-nonblk versions under ONE
+    :class:`repro.obs.Tracer` (so the exported timeline shows the three
+    legs back to back), slices the event stream per leg, and derives the
+    paper's headline number per leg — the overlap fraction (share of
+    handle in-flight time covered by concurrent compute spans,
+    :func:`repro.obs.analysis.overlap_fraction`).  Writes the trace-event
+    JSON to ``trace_path`` with the derived metrics in ``otherData``.
+
+    Hard acceptance checks (SystemExit on violation):
+
+    * the document validates against ``repro.obs.SPAN_SCHEMA``;
+    * the interop-blk leg recorded task pause spans (§4.1 pause/resume
+      made visible);
+    * the event-bound leg's overlap fraction is STRICTLY greater than
+      the sentinel leg's (taskified-serialised comm cannot overlap).
+    """
+    from repro import obs
+
+    params = dict(n_ranks=4, workers=2, nby=2, nbx=2,
+                  bs=24 if smoke else 48, iters=3)
+    legs = ("sentinel", "interop-blk", "interop-nonblk")
+    windows: Dict[str, Tuple[float, float]] = {}
+    with obs.tracing(capacity=1 << 18) as tr:
+        for v in legs:
+            t0 = (time.monotonic() - tr.epoch) * 1e6
+            run_real(v, **params)
+            windows[v] = (t0, (time.monotonic() - tr.epoch) * 1e6)
+        events = tr.events()
+
+    def leg_events(v):
+        lo, hi = windows[v]
+        return [e for e in events if lo <= e["ts"] < hi]
+
+    overlaps = {v: obs.overlap_fraction(leg_events(v)) for v in legs}
+    nonblk = leg_events("interop-nonblk")
+    per_rank = obs.per_rank_overlap(nonblk)
+    stragglers = obs.straggler_scores(nonblk)
+    doc = obs.export_trace(trace_path, events=events, extra={
+        "benchmark": "gauss_seidel",
+        "legs": {v: {"window_us": list(windows[v]),
+                     "overlap_fraction": overlaps[v]} for v in legs},
+        "per_rank_overlap": {str(r): f for r, f in per_rank.items()},
+        "straggler_scores": {str(r): s for r, s in stragglers.items()},
+    })
+    obs.assert_valid_trace(doc)
+    pauses = sum(1 for e in leg_events("interop-blk")
+                 if e["ph"] == "X" and e["cat"] == "task"
+                 and e["name"] == "pause")
+    if pauses == 0:
+        raise SystemExit("traced leg: interop-blk recorded no task pause "
+                         "spans — §4.1 pause/resume not visible")
+    if not overlaps["interop-nonblk"] > overlaps["sentinel"]:
+        raise SystemExit(
+            f"overlap ordering violated: event-bound "
+            f"{overlaps['interop-nonblk']:.3f} <= sentinel "
+            f"{overlaps['sentinel']:.3f}")
+    for v in legs:
+        print_fn(f"gs_trace_{v},{overlaps[v] * 1e6:.1f},"
+                 f"overlap-fraction-ppm")
+    print_fn(f"gs_trace_events,{len(events)},file={trace_path}"
+             f";pauses={pauses}")
+    return overlaps
+
+
 if __name__ == "__main__":
-    import sys
-    bench(smoke="--smoke" in sys.argv[1:])
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Gauss-Seidel benchmark (paper §7.1)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI leg: parity checks + one simulated point")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="run the traced legs and write Perfetto JSON here "
+                         "(skips the plain bench)")
+    ns = ap.parse_args()
+    if ns.trace:
+        run_traced(ns.trace, smoke=ns.smoke)
+    else:
+        bench(smoke=ns.smoke)

@@ -150,25 +150,26 @@ def run_real(version: str, *, n_ranks: int = 2, workers: int = 2,
         for r in range(n_ranks):
             for f in range(n_fields):
                 rt.submit(phys_task, f, r, it, inout=[("g", f, r)],
-                          name=f"phys[{f},{r}]@{it}", label="compute")
+                          name=f"phys[{f},{r}]@{it}", label="compute",
+                          rank=r)
         for r in range(n_ranks):
             rt.submit(a2a_g2s, r, it,
                       in_=[("g", f, r) for f in range(n_fields)],
                       out=[("xg", r, it)], label="comm",
-                      name=f"a2a_g2s[{r}]@{it}")
+                      name=f"a2a_g2s[{r}]@{it}", rank=r)
         for f in range(n_fields):
             rt.submit(fft_field, f, it, in_=[("xg", owner(f), it)],
                       out=[("s", f)], label="compute",
-                      name=f"fft[{f}]@{it}")
+                      name=f"fft[{f}]@{it}", rank=owner(f))
         for o in range(n_ranks):
             rt.submit(a2a_s2g, o, it,
                       in_=[("s", f) for f in fields_of[o]],
                       out=[("xs", o, it)], label="comm",
-                      name=f"a2a_s2g[{o}]@{it}")
+                      name=f"a2a_s2g[{o}]@{it}", rank=o)
         for r in range(n_ranks):
             rt.submit(unpack, r, it, in_=[("xs", r, it)],
                       inout=[("g", f, r) for f in range(n_fields)],
-                      label="compute", name=f"unp[{r}]@{it}")
+                      label="compute", name=f"unp[{r}]@{it}", rank=r)
 
     rt.taskwait()
     stats = dict(rt.stats)
@@ -236,22 +237,24 @@ def _elastic_step(comm, coll, fields: np.ndarray, *, mode, rt, it):
     for r in range(n_ranks):
         for f in range(n_fields):
             rt.submit(phys_task, f, r, inout=[("g", f, r)],
-                      name=f"ephys[{f},{r}]@{it}", label="compute")
+                      name=f"ephys[{f},{r}]@{it}", label="compute",
+                      rank=r)
     for r in range(n_ranks):
         rt.submit(a2a_g2s, r, in_=[("g", f, r) for f in range(n_fields)],
                   out=[("xg", r, it)], label="comm",
-                  name=f"ea2a_g2s[{r}]@{it}")
+                  name=f"ea2a_g2s[{r}]@{it}", rank=r)
     for f in range(n_fields):
         rt.submit(fft_field, f, in_=[("xg", f % n_ranks, it)],
-                  out=[("s", f)], label="compute", name=f"efft[{f}]@{it}")
+                  out=[("s", f)], label="compute", name=f"efft[{f}]@{it}",
+                  rank=f % n_ranks)
     for o in range(n_ranks):
         rt.submit(a2a_s2g, o, in_=[("s", f) for f in fields_of[o]],
                   out=[("xs", o, it)], label="comm",
-                  name=f"ea2a_s2g[{o}]@{it}")
+                  name=f"ea2a_s2g[{o}]@{it}", rank=o)
     for r in range(n_ranks):
         rt.submit(unpack, r, in_=[("xs", r, it)],
                   inout=[("g", f, r) for f in range(n_fields)],
-                  label="compute", name=f"eunp[{r}]@{it}")
+                  label="compute", name=f"eunp[{r}]@{it}", rank=r)
     rt.taskwait()
     return np.stack([np.concatenate([grid[(f, r)]
                                      for r in range(n_ranks)])
@@ -429,5 +432,47 @@ def bench(print_fn=print):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# traced leg: Perfetto timeline for the transposition pipeline
+# ---------------------------------------------------------------------------
+def run_traced(trace_path: str, *, print_fn=print):
+    """``--trace`` leg: one interop-nonblk run under the tracer.
+
+    Exports the task/handle/collective timeline of the event-bound
+    transposition pipeline as Perfetto JSON with the per-rank overlap
+    fractions and straggler scores in ``otherData``; exits non-zero if
+    the document violates ``repro.obs.SPAN_SCHEMA``.
+    """
+    from repro import obs
+
+    with obs.tracing(capacity=1 << 18) as tr:
+        run_real("interop-nonblk", n_ranks=2, workers=2,
+                 n_fields=8, n_grid=128, steps=3)
+        events = tr.events()
+    overlap = obs.overlap_fraction(events)
+    doc = obs.export_trace(trace_path, events=events, extra={
+        "benchmark": "ifsker",
+        "overlap_fraction": overlap,
+        "per_rank_overlap": {str(r): f for r, f in
+                             obs.per_rank_overlap(events).items()},
+        "straggler_scores": {str(r): s for r, s in
+                             obs.straggler_scores(events).items()},
+    })
+    obs.assert_valid_trace(doc)
+    print_fn(f"ifsker_trace_overlap,{overlap * 1e6:.1f},"
+             f"overlap-fraction-ppm")
+    print_fn(f"ifsker_trace_events,{len(events)},file={trace_path}")
+    return overlap
+
+
 if __name__ == "__main__":
-    bench()
+    import argparse
+    ap = argparse.ArgumentParser(description="IFSKer benchmark (paper §7.2)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="run the traced interop-nonblk leg and write "
+                         "Perfetto JSON here (skips the plain bench)")
+    ns = ap.parse_args()
+    if ns.trace:
+        run_traced(ns.trace)
+    else:
+        bench()

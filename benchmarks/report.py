@@ -3,6 +3,13 @@ JSON records.
 
   PYTHONPATH=src python -m benchmarks.report results/dryrun_single.json \
       results/dryrun_multi.json > /tmp/tables.md
+
+With ``--trace``, the arguments are trace-event JSON files instead
+(``repro.obs.export_trace`` artifacts, e.g. the ``--trace`` legs of
+``gauss_seidel``/``ifsker``/``serve_bench``) and the output is the
+per-rank straggler and overlap tables derived from the spans:
+
+  PYTHONPATH=src python -m benchmarks.report --trace trace-gs.json
 """
 
 from __future__ import annotations
@@ -72,8 +79,54 @@ def collective_mix(records):
     return "\n".join(out)
 
 
+def straggler_table(events):
+    """Per-rank slowdown table from task run spans (repro.obs traces).
+
+    ``score`` is each rank's busy time over the median rank's — the
+    per-rank straggler signal ``executor._straggler_service`` acts on,
+    recomputed offline from the exported spans.
+    """
+    from repro.obs import analysis
+
+    scores = analysis.straggler_scores(events)
+    overlap = analysis.per_rank_overlap(events)
+    out = ["| rank | tasks | busy s | slowdown ×median | overlap |",
+           "|---|---|---|---|---|"]
+    for rank in sorted(scores):
+        s = scores[rank]
+        out.append(f"| {rank} | {s['tasks']} | {s['busy']:.4f} "
+                   f"| {s['score']:.2f} "
+                   f"| {overlap.get(rank, 0.0):.3f} |")
+    return "\n".join(out)
+
+
+def trace_report(paths, print_fn=print):
+    """The ``--trace`` mode: straggler/overlap tables per trace file."""
+    from repro.obs import analysis, trace as trace_mod
+
+    for path in paths:
+        doc = json.load(open(path))
+        problems = trace_mod.validate_trace(doc)
+        events = doc["traceEvents"] if isinstance(doc, dict) else doc
+        summary = analysis.summarize(events)
+        print_fn(f"\n### Trace: {path} ({summary['events']} events, "
+                 f"{len(problems)} schema problems)\n")
+        print_fn(f"overall overlap fraction: "
+                 f"{summary['overlap_fraction']:.3f}\n")
+        print_fn("#### Per-rank stragglers\n")
+        print_fn(straggler_table(events))
+        if problems:
+            print_fn("\n#### Schema problems\n")
+            for p in problems[:20]:
+                print_fn(f"- {p}")
+
+
 def main():
-    for path in sys.argv[1:]:
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--trace":
+        trace_report(argv[1:])
+        return
+    for path in argv:
         records = json.load(open(path))
         print(f"\n### Records: {path} "
               f"({sum(1 for r in records if r.get('ok'))}/{len(records)} ok)"

@@ -150,12 +150,52 @@ def bench(*, smoke: bool = False, seed: int = 0,
     return report
 
 
+def run_traced(trace_path: str, *, seed: int = 0, print_fn=print) -> float:
+    """``--trace`` leg: one event-bound serve run under the tracer.
+
+    Exports the serving micro-step timeline (device_step / detok spans,
+    token instants, handle in-flight windows) as Perfetto JSON; exits
+    non-zero if the document violates ``repro.obs.SPAN_SCHEMA``.
+    """
+    from repro import obs
+
+    trace = make_trace(16, seed=seed, rate_per_s=400.0,
+                       gen_choices=(4, 8))
+    adapter = SyntheticAdapter(dev_ms=10.0, host_rounds=4, streams=16)
+    adapter.warmup()
+    try:
+        with obs.tracing(capacity=1 << 18) as tr:
+            rep = run_leg("event", trace, adapter, slots=16, workers=4)
+            events = tr.events()
+    finally:
+        adapter.close()
+    counts = obs.summarize(events)["counts"]
+    doc = obs.export_trace(trace_path, events=events, extra={
+        "benchmark": "serve_bench", "completion": "event",
+        "tokens": rep.tokens, "tokens_per_s": rep.tokens_per_s,
+        "p99_ms": rep.p99_ms,
+    })
+    obs.assert_valid_trace(doc)
+    if not counts.get("serving/device_step[X]"):
+        raise SystemExit("serve_bench --trace: no device_step spans "
+                         "recorded")
+    print_fn(f"serve_trace_events,{len(events)},file={trace_path};"
+             f"tokens={rep.tokens}")
+    return rep.tokens_per_s
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--json", default="BENCH_serve.json")
+    p.add_argument("--trace", metavar="PATH", default=None,
+                   help="run one traced event-bound leg and write Perfetto "
+                        "JSON here (skips the comparison bench)")
     args = p.parse_args(argv)
+    if args.trace:
+        run_traced(args.trace, seed=args.seed)
+        return 0
     bench(smoke=args.smoke, seed=args.seed, json_path=args.json)
     return 0
 

@@ -80,6 +80,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import trace as _trc
 from . import tac
 from . import program as program_ir
 from . import schedule as schedule_ir
@@ -232,6 +233,11 @@ class _Machine:
                     return False
                 res = [h.result for h in hs] if many else hs[0].result
                 self.steps += 1
+                if _trc.TRACING:
+                    # One resolved wait == one round of this rank's
+                    # schedule advanced (by whichever progress thread).
+                    _trc.TRACER.instant("collective", "round",
+                                        step=self.steps, waits=len(hs))
                 self._waiting = self.gen.send(res)
         except StopIteration as stop:
             self.done = True

@@ -56,8 +56,13 @@ from __future__ import annotations
 import collections
 import sys
 import threading
+import time
 import traceback
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from ..obs import trace as _tr
+from ..obs.registry import REGISTRY as _REGISTRY
+from ..obs.registry import Counter as _Counter
 
 __all__ = ["PushCompletion", "Continuation", "ContinuationEngine"]
 
@@ -160,7 +165,7 @@ class _Pending:
     """One attach(): handles still in flight + the callback to dispatch."""
 
     __slots__ = ("handles", "callback", "continuation", "_remaining",
-                 "_lock")
+                 "_lock", "_ready_at")
 
     def __init__(self, handles: List[Any], callback: Callable[[], Any],
                  continuation: Continuation) -> None:
@@ -169,6 +174,7 @@ class _Pending:
         self.continuation = continuation
         self._remaining = len(handles)
         self._lock = threading.Lock()
+        self._ready_at: Optional[float] = None  # queue time (tracing only)
 
     def _arrived(self) -> bool:
         """Count one handle completion; True when the set is complete."""
@@ -195,6 +201,17 @@ class ContinuationEngine:
     * ``callback_errors`` — callbacks that raised (error captured on the
       continuation, never on the dispatching thread).
 
+    ``stats`` is a property assembling a fresh dict from **striped
+    per-thread counters** (:class:`repro.obs.registry.Counter`): the
+    engine lock used to be taken for every single increment — one lock
+    round-trip per attach, per completion, and per dispatch on the
+    hottest path in the runtime — whereas a striped cell increment is
+    lock-free after a thread's first touch.  Totals stay exact
+    (``tests/test_continuations.py`` reconciles them against ground
+    truth after multi-threaded runs); only inter-counter ordering is
+    relaxed, so a mid-flight snapshot may transiently show
+    ``dispatches < completions``.
+
     ``push=False`` is the **legacy polling compatibility mode**: every
     attached handle — push-capable or not — rides the fallback poll list
     and is re-``test``-ed per service tick, reproducing the retired TAC
@@ -215,9 +232,24 @@ class ContinuationEngine:
         self._lock = threading.Lock()
         self._queue: collections.deque = collections.deque()
         self._polled: List[tuple] = []      # (handle, _Pending) fallbacks
-        self.stats = {"attached": 0, "completions": 0, "dispatches": 0,
-                      "inline_dispatches": 0, "tests": 0,
-                      "callback_errors": 0}
+        # Pre-bound striped counters: the emit site is one bound-method
+        # call on a lock-free cell, not a dict update under self._lock.
+        self._n_attached = _Counter("attached")
+        self._n_completions = _Counter("completions")
+        self._n_dispatches = _Counter("dispatches")
+        self._n_inline = _Counter("inline_dispatches")
+        self._n_tests = _Counter("tests")
+        self._n_cb_errors = _Counter("callback_errors")
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Exact counter totals, assembled fresh per read."""
+        return {"attached": self._n_attached.value,
+                "completions": self._n_completions.value,
+                "dispatches": self._n_dispatches.value,
+                "inline_dispatches": self._n_inline.value,
+                "tests": self._n_tests.value,
+                "callback_errors": self._n_cb_errors.value}
 
     # -- the user-facing API ------------------------------------------------
     def attach(self, handles: Any,
@@ -237,8 +269,9 @@ class ContinuationEngine:
         if not hs:
             raise ValueError("attach() needs at least one handle")
         rec = _Pending(hs, callback, Continuation())
-        with self._lock:
-            self.stats["attached"] += 1
+        self._n_attached.inc()
+        if _tr.TRACING:
+            _tr.TRACER.instant("continuation", "attach", n_handles=len(hs))
         for h in hs:
             push = getattr(h, "on_complete", None) if self.push else None
             if callable(push):
@@ -254,21 +287,32 @@ class ContinuationEngine:
     def _arrived(self, rec: _Pending) -> None:
         if not rec._arrived():
             return
+        self._n_completions.inc()
         inline = False
+        if _tr.TRACING:
+            rec._ready_at = time.monotonic()
         with self._lock:
-            self.stats["completions"] += 1
             if len(self._queue) >= self.queue_capacity:
                 inline = True           # bounded queue full: run it here
             else:
                 self._queue.append(rec)
+                if _tr.TRACING:
+                    _REGISTRY.gauge("continuation.queued").set(
+                        len(self._queue))
         if inline:
-            with self._lock:
-                self.stats["inline_dispatches"] += 1
+            self._n_inline.inc()
             self._run(rec)
 
     def _run(self, rec: _Pending) -> None:
-        with self._lock:
-            self.stats["dispatches"] += 1
+        self._n_dispatches.inc()
+        if _tr.TRACING:
+            _tr.TRACER.instant("continuation", "dispatch")
+            if rec._ready_at is not None:
+                # Queue->callback latency: the per-completion dispatch
+                # term of simulate.progress_cost, measured.
+                _REGISTRY.histogram(
+                    "continuation.dispatch_latency_s").observe(
+                        time.monotonic() - rec._ready_at)
         try:
             rec.callback()
         except Exception as exc:
@@ -277,8 +321,7 @@ class ContinuationEngine:
             # wiring discards it), so ALSO report loudly: a swallowed
             # unblock/decrease failure would otherwise hang taskwait
             # with no trace.  KeyboardInterrupt/SystemExit propagate.
-            with self._lock:
-                self.stats["callback_errors"] += 1
+            self._n_cb_errors.inc()
             traceback.print_exc()
             print("continuation callback failed (error stored on the "
                   "continuation; see traceback above)", file=sys.stderr)
@@ -291,8 +334,7 @@ class ContinuationEngine:
             # continuation's reader re-raises it.
             results = [getattr(h, "result", None) for h in rec.handles]
         except Exception as exc:
-            with self._lock:
-                self.stats["callback_errors"] += 1
+            self._n_cb_errors.inc()
             rec.continuation._fire(None, exc)
             return
         rec.continuation._fire(
@@ -321,8 +363,7 @@ class ContinuationEngine:
         with self._lock:
             snapshot = list(self._polled)
         if snapshot:
-            with self._lock:
-                self.stats["tests"] += len(snapshot)
+            self._n_tests.inc(len(snapshot))
             done = [item for item in snapshot if item[0].test()]
             if done:
                 done_ids = {id(item) for item in done}

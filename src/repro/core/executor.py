@@ -48,6 +48,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..obs import registry as _reg
+from ..obs import trace as _tr
 from . import events as _ev
 from .continuations import ContinuationEngine
 from .events import BlockingContext, set_current_task, current_task
@@ -205,14 +207,23 @@ class TaskRuntime:
                in_: Sequence[Any] = (), out: Sequence[Any] = (),
                inout: Sequence[Any] = (), name: Optional[str] = None,
                cost: float = 1.0, idempotent: bool = False,
-               label: Optional[str] = None, **kwargs: Any) -> Task:
-        """Create and submit a task.  Dependencies follow submission order."""
+               label: Optional[str] = None, rank: Optional[int] = None,
+               **kwargs: Any) -> Task:
+        """Create and submit a task.  Dependencies follow submission order.
+
+        ``rank`` optionally attributes the task to a logical rank for
+        trace/straggler accounting (:mod:`repro.obs`); it does not affect
+        scheduling.
+        """
         if not self._started:
             self.start()
         task = Task(fn, args, kwargs, name=name, runtime=self, cost=cost,
-                    idempotent=idempotent, label=label)
+                    idempotent=idempotent, label=label, rank=rank)
         with self._cv:
             self._unreleased += 1
+        if _tr.TRACING:
+            _tr.TRACER.instant("task", "submit", rank=task.rank,
+                               task=task.name)
         ready = self.graph.register(task, in_, out, inout)
         if ready:
             self._enqueue(task)
@@ -267,6 +278,9 @@ class TaskRuntime:
                 self._ready.appendleft(task)
             else:
                 self._ready.append(task)
+            if _tr.TRACING:
+                _reg.REGISTRY.gauge("runtime.ready_queue").set(
+                    len(self._ready))
             self._cv.notify()
 
     def _spawn_worker_locked(self) -> None:
@@ -323,6 +337,12 @@ class TaskRuntime:
         finally:
             set_current_task(prev)
         task._finished_at = time.monotonic()
+        if _tr.TRACING:
+            # One span per body execution: pause spans (the §4.1 wait)
+            # nest inside it on the timeline.
+            _tr.TRACER.span("task", "run", task._started_at,
+                            task._finished_at, rank=task.rank,
+                            task=task.name, label=task.label)
 
         with task._state_lock:
             if task._completed_once:
@@ -347,6 +367,9 @@ class TaskRuntime:
     # -- dependency release (called by EventCounter at zero) ---------------
     def _release_task(self, task: Task) -> None:
         task._state = RELEASED
+        if _tr.TRACING:
+            _tr.TRACER.instant("task", "release", rank=task.rank,
+                               task=task.name)
         for succ in self.graph.on_release(task):
             self._enqueue(succ)
         with self._cv:
@@ -359,6 +382,7 @@ class TaskRuntime:
         if self.block_mode == "nested":
             self._block_nested(ctx)
             return
+        t_pause = time.monotonic() if _tr.TRACING else 0.0
         with self._cv:
             task._state = BLOCKED
             self._blocked_threads += 1
@@ -373,11 +397,16 @@ class TaskRuntime:
             self._blocked_threads -= 1
             task._state = RUNNING
             self.stats["task_resumes"] += 1
+        if _tr.TRACING:
+            _tr.TRACER.span("task", "pause", t_pause, time.monotonic(),
+                            rank=task.rank, task=task.name,
+                            mode="spare-thread")
 
     def _block_nested(self, ctx: BlockingContext) -> None:
         """Help-first blocking: run other ready tasks on this stack (§5)."""
         task = ctx._task
         task._state = BLOCKED
+        t_pause = time.monotonic() if _tr.TRACING else 0.0
         with self._cv:
             self.stats["task_blocks"] += 1
         while not ctx._event.is_set():
@@ -393,6 +422,9 @@ class TaskRuntime:
         task._state = RUNNING
         with self._cv:
             self.stats["task_resumes"] += 1
+        if _tr.TRACING:
+            _tr.TRACER.span("task", "pause", t_pause, time.monotonic(),
+                            rank=task.rank, task=task.name, mode="nested")
 
     def _on_task_unblock(self, task: Task) -> None:
         with self._cv:
@@ -410,6 +442,14 @@ class TaskRuntime:
                 t._speculated = True
                 with self._cv:
                     self.stats["speculative_reruns"] += 1
+                if _tr.TRACING:
+                    # The speculation decision, trace-visible: this task
+                    # exceeded the timeout and gets re-enqueued; compare
+                    # against analysis.straggler_scores on the same trace.
+                    _tr.TRACER.instant(
+                        "task", "speculate", rank=t.rank, task=t.name,
+                        elapsed_s=now - t._started_at,
+                        timeout_s=self.speculative_timeout)
                 self._enqueue(t, front=True)
         return False  # keep the watchdog registered
 

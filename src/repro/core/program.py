@@ -58,6 +58,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace as _trc
 from . import tac
 from .schedule import (Combine, Concat, Const, Copy, Pack, Recv, Schedule,
                        Send, Slice, Unpack)
@@ -358,6 +359,7 @@ class CompiledProgram:
         if arena is not None:
             env[_ARENA] = arena
         pending: Dict[Any, Any] = {}
+        rounds = 0
         for waits, action in plan.steps:
             if waits:
                 if len(waits) == 1:
@@ -376,6 +378,10 @@ class CompiledProgram:
                         vals = yield hs
                         for b, v in zip(waits, vals):
                             env[b] = v
+                rounds += 1
+                if _trc.TRACING:
+                    _trc.TRACER.instant("collective", "round", rank=rank,
+                                        step=rounds, waits=len(waits))
             action(env, pending, key)
         tail = plan.tail
         if tail:
@@ -391,6 +397,9 @@ class CompiledProgram:
                     vals = yield hs
                     for b, v in zip(tail, vals):
                         env[b] = v
+            if _trc.TRACING:
+                _trc.TRACER.instant("collective", "round", rank=rank,
+                                    step=rounds + 1, waits=len(tail))
         finish = self._finish
         return None if finish is None else finish(env, shape, rank)
 

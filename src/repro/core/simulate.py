@@ -358,6 +358,51 @@ class Simulator:
 
 
 # ---------------------------------------------------------------------------
+# Trace replay: SimTask timelines -> repro.obs span events
+# ---------------------------------------------------------------------------
+def trace_events(tasks: List[SimTask]) -> List[dict]:
+    """Chrome-trace events for a simulated run — same schema as the host.
+
+    Call after :meth:`Simulator.run` (the tasks carry their timestamps).
+    Each task body becomes a ``task/run`` span labelled ``compute`` or
+    ``comm``; each comm-kind task's wait window (body done → completion)
+    becomes a ``handle/inflight`` span, and :data:`COMM_PAUSED` waits
+    additionally emit the ``task/pause`` span the host runtime's
+    spare-thread block would.  Events carry ``source="sim"`` and validate
+    against :func:`repro.obs.trace.SPAN_SCHEMA`, so
+    :func:`repro.obs.analysis.overlap_fraction` computes the *same*
+    number from a simulated replay as from a host trace — the oracle
+    ``tests/test_obs.py`` exploits.
+    """
+    from ..obs.trace import span_event
+
+    events: List[dict] = []
+    for t in tasks:
+        if t.start_time is None or t._body_done_at is None:
+            continue                      # never ran (failed rank)
+        t0 = t.start_time * 1e6
+        t1 = t._body_done_at * 1e6
+        label = "compute" if t.kind == COMPUTE else "comm"
+        if t1 > t0:                       # zero-compute proxies add noise
+            events.append(span_event(
+                "task", "run", t0, t1 - t0, rank=t.rank,
+                task=t.name or str(t.id), label=label, source="sim"))
+        if t.kind == COMPUTE or t.done_time is None:
+            continue
+        t2 = t.done_time * 1e6
+        if t2 > t1:
+            events.append(span_event(
+                "handle", "inflight", t1, t2 - t1, rank=t.rank,
+                kind=t.kind, task=t.name or str(t.id), source="sim"))
+            if t.kind == COMM_PAUSED:
+                events.append(span_event(
+                    "task", "pause", t1, t2 - t1, rank=t.rank,
+                    task=t.name or str(t.id), mode="sim", source="sim"))
+    events.sort(key=lambda e: e["ts"])
+    return events
+
+
+# ---------------------------------------------------------------------------
 # Progress-path cost: the α-β term of the two notification backends
 # ---------------------------------------------------------------------------
 def progress_cost(backend: str, *, in_flight: float, ticks: float,

@@ -31,11 +31,14 @@ import concurrent.futures
 import itertools
 import math
 import threading
+import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
+from ..obs import trace as _tr
+from ..obs.registry import REGISTRY as _REGISTRY
 from .continuations import PushCompletion
 from .events import (current_task, get_current_blocking_context,
                      get_current_event_counter,
@@ -204,6 +207,25 @@ class EventHandle(PushCompletion, AsyncHandle):
         super().__init__()
         self._result: Any = None
         self.error: Optional[BaseException] = None
+        if _tr.TRACING:
+            # Handle-lifecycle tracing: the in-flight span opens here
+            # (post time) and closes on complete/fail.  The posting
+            # task's rank attributes the span (per-rank overlap
+            # accounting); outside task code the span stays unattributed.
+            self._t_post = time.monotonic()
+            task = current_task()
+            self._obs_rank = None if task is None else task.rank
+            _REGISTRY.gauge("tac.inflight_handles").inc()
+
+    def _trace_done(self) -> None:
+        """Close the in-flight span (first completion only)."""
+        t_post = getattr(self, "_t_post", None)
+        if t_post is None:
+            return
+        _REGISTRY.gauge("tac.inflight_handles").dec()
+        _tr.TRACER.span("handle", "inflight", t_post, time.monotonic(),
+                        rank=self._obs_rank, kind=type(self).__name__,
+                        ok=self.error is None)
 
     @property
     def result(self) -> Any:
@@ -226,6 +248,8 @@ class EventHandle(PushCompletion, AsyncHandle):
             if self._waiter is not None:
                 self._waiter.set()
             cbs, self._cbs = self._cbs, []
+        if _tr.TRACING:
+            self._trace_done()
         for cb in cbs:
             cb(self)
 
@@ -241,6 +265,8 @@ class EventHandle(PushCompletion, AsyncHandle):
             if self._waiter is not None:
                 self._waiter.set()
             cbs, self._cbs = self._cbs, []
+        if _tr.TRACING:
+            self._trace_done()
         for cb in cbs:
             cb(self)
 
@@ -315,6 +341,10 @@ class _SendHandle(EventHandle):
             # the match-time re-complete sees _done and returns).
             self._result = payload
             self._done = True
+            if _tr.TRACING:
+                # complete() will early-return on the match-time call, so
+                # close the (zero-length) in-flight span here.
+                self._trace_done()
 
 
 class _RecvHandle(EventHandle):
@@ -388,6 +418,9 @@ class CommWorld:
             else:
                 self._msgs.setdefault(key, []).append(h)
         if matched is not None:
+            if _tr.TRACING:
+                _tr.TRACER.instant("handle", "match", src=src, dst=dst,
+                                   rank=getattr(h, "_obs_rank", None))
             # Complete OUTSIDE the world lock: completion may push a
             # continuation whose dispatch posts messages (needs the lock).
             matched.complete(payload)
@@ -411,6 +444,9 @@ class CommWorld:
             else:
                 self._recvs.setdefault(key, []).append(r)
         if matched is not None:
+            if _tr.TRACING:
+                _tr.TRACER.instant("handle", "match", src=src, dst=dst,
+                                   rank=getattr(r, "_obs_rank", None))
             if not matched._done:           # synchronous send: confirm match
                 matched.complete(matched.payload)   # outside the lock
             r.complete(matched.payload)
@@ -1208,6 +1244,19 @@ def iwait(handle: Any) -> None:
             return
         cnt = get_current_event_counter()
         increase_current_task_event_counter(cnt, 1)
+        if _tr.TRACING:
+            _tr.TRACER.instant("handle", "bind", rank=task.rank,
+                               task=task.name, n_events=1)
+
+            def _decrease(cnt=cnt, task=task) -> None:
+                decrease_task_event_counter(cnt, 1)
+                # §4.3 made visible: the dependency release deferred to
+                # completion time, firing from the dispatch thread.
+                _tr.TRACER.instant("handle", "dep-release", rank=task.rank,
+                                   task=task.name, n_events=1)
+
+            task._runtime.continuations.attach(handle, _decrease)
+            return
         task._runtime.continuations.attach(
             handle, lambda: decrease_task_event_counter(cnt, 1))
         return
@@ -1224,6 +1273,17 @@ def iwaitall(handles: Sequence[Any]) -> None:
         cnt = get_current_event_counter()
         increase_current_task_event_counter(cnt, len(pending))
         n = len(pending)
+        if _tr.TRACING:
+            _tr.TRACER.instant("handle", "bind", rank=task.rank,
+                               task=task.name, n_events=n)
+
+            def _decrease(cnt=cnt, n=n, task=task) -> None:
+                decrease_task_event_counter(cnt, n)
+                _tr.TRACER.instant("handle", "dep-release", rank=task.rank,
+                                   task=task.name, n_events=n)
+
+            task._runtime.continuations.attach(pending, _decrease)
+            return
         task._runtime.continuations.attach(
             pending, lambda: decrease_task_event_counter(cnt, n))
         return

@@ -53,13 +53,15 @@ class Task:
     def __init__(self, fn: Callable[..., Any], args: Tuple[Any, ...],
                  kwargs: Dict[str, Any], *, name: Optional[str],
                  runtime: "TaskRuntime", cost: float = 1.0,
-                 idempotent: bool = False, label: Optional[str] = None):
+                 idempotent: bool = False, label: Optional[str] = None,
+                 rank: Optional[int] = None):
         self.id = next(_task_ids)
         self.fn = fn
         self.args = args
         self.kwargs = kwargs
         self.name = name or getattr(fn, "__name__", f"task{self.id}")
         self.label = label  # free-form grouping tag (used by benchmarks)
+        self.rank = rank    # logical rank for trace attribution (repro.obs)
         self.cost = cost    # abstract cost for the makespan simulator
         self.idempotent = idempotent  # eligible for speculative re-execution
         self.result: Any = None

@@ -9,8 +9,9 @@ runtime the training path already uses.  See ``docs/api.md`` and the
 "Serving" section of ``docs/architecture.md``.
 """
 
+from ..obs.metrics import MetricSink, TokenRecord, percentile
 from .engine import ServingEngine
-from .metrics import MetricSink, ServeReport, TokenRecord, percentile
+from .metrics import ServeReport
 from .queue import RequestQueue
 from .request import Request, RequestState
 from .synthetic import SyntheticAdapter, token_at

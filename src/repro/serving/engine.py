@@ -52,7 +52,9 @@ from ..core import resilience, tac
 from ..core.collectives import Collectives
 from ..core.executor import TaskError, TaskRuntime
 from ..core.tac import CommRevokedError, RankFailedError
-from .metrics import MetricSink, ServeReport, TokenRecord
+from ..obs import trace as _tr
+from ..obs.metrics import MetricSink, TokenRecord
+from .metrics import ServeReport
 from .queue import RequestQueue
 from .request import Request, RequestState
 
@@ -148,6 +150,7 @@ class ServingEngine:
         path) plus host detok INSIDE the device chain — the artificial
         serialisation of paper §7.1.
         """
+        t0 = time.monotonic() if _tr.TRACING else 0.0
         self._tp_allreduce(req, step)
         if step == 0:
             tok, state = self.adapter.prefill(req)
@@ -161,9 +164,17 @@ class ServingEngine:
         if self.completion == "event":
             req._toks[step] = tok       # type: ignore[attr-defined]
             tac.iwait(tac.as_handle(tok))
+            if _tr.TRACING:
+                _tr.TRACER.span("serving", "device_step", t0,
+                                time.monotonic(), rid=req.rid, step=step,
+                                completion=self.completion)
             return tok
         tok = tac.as_handle(tok).wait()     # blocks this worker
         self._emit(req, step, tok)
+        if _tr.TRACING:
+            _tr.TRACER.span("serving", "device_step", t0, time.monotonic(),
+                            rid=req.rid, step=step,
+                            completion=self.completion)
         return tok
 
     def _detok_task(self, req: Request, step: int) -> None:
@@ -173,7 +184,11 @@ class ServingEngine:
         tok = req._toks.pop(step, None)     # type: ignore[attr-defined]
         if tok is None:
             return      # the producing step failed; nothing to emit
+        t0 = time.monotonic() if _tr.TRACING else 0.0
         self._emit(req, step, tok)
+        if _tr.TRACING:
+            _tr.TRACER.span("serving", "detok", t0, time.monotonic(),
+                            rid=req.rid, step=step)
 
     def _emit(self, req: Request, step: int, tok: Any) -> None:
         val = self.adapter.detok(req, step, tok)
@@ -184,6 +199,10 @@ class ServingEngine:
                 rid=req.rid, step=step,
                 t_submit=req._t_submit[step],    # type: ignore[attr-defined]
                 t_emit=now))
+        if _tr.TRACING:
+            lat = now - req._t_submit[step]  # type: ignore[attr-defined]
+            _tr.TRACER.instant("serving", "token", rid=req.rid, step=step,
+                               latency_s=lat)
 
     def _finish(self, req: Request) -> None:
         """Retire the request — but only if every token actually

@@ -1,59 +1,39 @@
-"""Serving metrics: per-token latency records and the run report."""
+"""Serving metrics: the run report (+ deprecated re-export shims).
+
+``percentile``, :class:`~repro.obs.metrics.TokenRecord` and
+:class:`~repro.obs.metrics.MetricSink` moved to :mod:`repro.obs.metrics`
+(the unified observability layer).  Importing them from here still works
+but warns — matching the ``renamed_kwarg`` deprecation pattern of
+:mod:`repro.core.options` — via a module-level ``__getattr__`` shim.
+:class:`ServeReport` stays: it is serving-specific.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-import threading
-from typing import Any, Dict, List, Tuple
+import warnings
+from typing import Any, Dict, List
+
+from ..obs.metrics import MetricSink as _MetricSink
+from ..obs.metrics import TokenRecord as _TokenRecord
+from ..obs.metrics import percentile as _percentile
 
 __all__ = ["TokenRecord", "MetricSink", "ServeReport", "percentile"]
 
-
-def percentile(values: List[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 100]) of a non-empty list."""
-    if not values:
-        raise ValueError("percentile of an empty list")
-    xs = sorted(values)
-    k = max(0, min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1)))))
-    return xs[k]
+_MOVED = {"percentile": _percentile, "TokenRecord": _TokenRecord,
+          "MetricSink": _MetricSink}
 
 
-@dataclasses.dataclass(frozen=True)
-class TokenRecord:
-    """One emitted token: which request/step, and its latency window.
-
-    ``t_submit`` is when the scheduler handed the decode micro-step to
-    the runtime, ``t_emit`` when the host detokeniser finished with the
-    token — so the latency covers device compute, completion
-    notification, and host post-processing, which is exactly the window
-    the event-bound vs blocking-sentinel legs differ in.
-    """
-
-    rid: int
-    step: int
-    t_submit: float
-    t_emit: float
-
-    @property
-    def latency_s(self) -> float:
-        return self.t_emit - self.t_submit
-
-
-class MetricSink:
-    """Thread-safe collector the engine's tasks append records to."""
-
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
-        self._records: List[TokenRecord] = []
-
-    def emit(self, rec: TokenRecord) -> None:
-        with self._lock:
-            self._records.append(rec)
-
-    @property
-    def records(self) -> List[TokenRecord]:
-        with self._lock:
-            return list(self._records)
+def __getattr__(name: str) -> Any:
+    moved = _MOVED.get(name)
+    if moved is not None:
+        warnings.warn(
+            f"repro.serving.metrics.{name} moved to repro.obs.metrics "
+            f"(the unified observability layer); import it from repro.obs "
+            f"instead", DeprecationWarning, stacklevel=2)
+        return moved
+    raise AttributeError(
+        f"module 'repro.serving.metrics' has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -72,7 +52,7 @@ class ServeReport:
     outputs: Dict[int, List[Any]]       # rid -> emitted tokens, step order
 
     @staticmethod
-    def build(completion: str, records: List[TokenRecord], wall_s: float,
+    def build(completion: str, records: List[_TokenRecord], wall_s: float,
               outputs: Dict[int, List[Any]], evictions: int,
               recoveries: int) -> "ServeReport":
         lat = [r.latency_s for r in records]
@@ -82,8 +62,8 @@ class ServeReport:
             tokens=len(records),
             wall_s=wall_s,
             tokens_per_s=len(records) / wall_s if wall_s > 0 else 0.0,
-            p50_ms=percentile(lat, 50) * 1e3 if lat else 0.0,
-            p99_ms=percentile(lat, 99) * 1e3 if lat else 0.0,
+            p50_ms=_percentile(lat, 50) * 1e3 if lat else 0.0,
+            p99_ms=_percentile(lat, 99) * 1e3 if lat else 0.0,
             evictions=evictions,
             recoveries=recoveries,
             outputs=outputs)

@@ -551,3 +551,48 @@ def test_progress_cost_model():
 def test_runtime_rejects_unknown_notify():
     with pytest.raises(ValueError):
         TaskRuntime(notify="wat")
+
+
+# ---------------------------------------------------------------------------
+# striped stats cells (repro.obs.registry.Counter): exact reconciliation
+# ---------------------------------------------------------------------------
+def test_stats_reconcile_exactly_under_concurrency():
+    """The lock-per-increment ``stats`` dict became striped registry
+    counters — increments are lock-free, yet the totals must stay EXACT:
+    after a full drain every attach has a completion and a dispatch, no
+    callback error, no lost count."""
+    import collections
+
+    eng = ContinuationEngine(queue_capacity=64)
+    n_threads, per = 6, 250
+    fired = collections.deque()          # deque.append is atomic
+
+    def churn():
+        for _ in range(per):
+            h = tac.EventHandle()
+            eng.attach(h, lambda: fired.append(1))
+            h.complete(None)
+            eng.dispatch()
+
+    threads = [threading.Thread(target=churn) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    while eng.dispatch():                # drain any queued residue
+        pass
+
+    total = n_threads * per
+    s = eng.stats
+    assert s["attached"] == total
+    assert s["completions"] == total
+    # every completion is dispatched exactly once (queued or inline when
+    # the bounded queue overflows under the 6-thread churn)
+    assert s["dispatches"] == total
+    assert s["inline_dispatches"] + (total - s["inline_dispatches"]) == total
+    assert s["callback_errors"] == 0
+    assert len(fired) == total           # callbacks all ran, exactly once
+    # reads are snapshots: a fresh, equal dict each time — not a shared
+    # mutable mapping callers could race on
+    again = eng.stats
+    assert again == s and again is not s
